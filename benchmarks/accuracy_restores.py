@@ -1,0 +1,92 @@
+"""Paper Fig. 10: lifetime accuracy degradation vs. number of restores from
+quantized checkpoints, per bit-width.
+
+Trains the reduced DLRM on the synthetic CTR stream; a run with L failures
+restores from a b-bit quantized checkpoint L times (uniformly spaced). The
+metric is the final-eval logloss delta vs. the never-failed fp32 run,
+reported as a relative percentage (paper threshold: 0.01%).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_cell
+from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, PAPER_DEFAULTS
+from repro.data.cells import batch_for_cell
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def eval_loss(bundle, state, n_batches=16, seed=10_000):
+    """Fixed held-out batches (different stream offset than training)."""
+    total = 0.0
+    loss_fn = jax.jit(bundle.loss_fn)
+    for i in range(n_batches):
+        batch = batch_for_cell(bundle, seed + i)
+        loss, _ = loss_fn(state.params, batch)
+        total += float(jax.device_get(loss))
+    return total / n_batches
+
+
+def run_one(bundle, bits, n_restores, total_steps=80, interval=8):
+    quant = PAPER_DEFAULTS[bits] if bits else None
+    store = InMemoryStore()
+    cfg = CheckpointConfig(interval_batches=interval, policy="intermittent",
+                           quant=quant, async_write=False)
+    fail_steps = ([] if n_restores == 0 else
+                  list(np.linspace(interval + 1, total_steps - 1,
+                                   n_restores).astype(int)))
+    t = Trainer(bundle, store, cfg, TrainerConfig(
+        total_steps=total_steps, use_reader_tier=False))
+    t.init_or_restore()
+    step = 0
+    for fs in fail_steps:
+        t.run(int(fs) - step)  # train up to the failure point
+        step = int(fs)
+        # simulate failure: rebuild trainer from the last checkpoint
+        t.close()
+        t = Trainer(bundle, store, cfg, TrainerConfig(
+            total_steps=total_steps, use_reader_tier=False))
+        step = t.init_or_restore()
+    t.run(total_steps - step)
+    final = t.state
+    t.close()
+    return final
+
+
+def run(out_dir: str = "results", *, total_steps: int = 80) -> Dict:
+    bundle = get_cell("dlrm-rm2", "train_batch", reduced=True)
+    baseline_state = run_one(bundle, bits=None, n_restores=0,
+                             total_steps=total_steps)
+    base = eval_loss(bundle, baseline_state)
+
+    grid: Dict[str, Dict[str, float]] = {}
+    for bits in (2, 3, 4, 8):
+        grid[str(bits)] = {}
+        for L in (1, 4, 8):
+            st = run_one(bundle, bits=bits, n_restores=L,
+                         total_steps=total_steps)
+            loss = eval_loss(bundle, st)
+            grid[str(bits)][str(L)] = 100.0 * (loss - base) / base
+
+    out = dict(figure="fig10", baseline_eval_loss=base, degradation_pct=grid)
+    with open(f"{out_dir}/bench_accuracy_restores.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"baseline eval logloss: {base:.5f}")
+    print("Fig10 eval-loss degradation (%) vs restores L:")
+    print("  bits\\L      1        4        8")
+    for bits in (2, 3, 4, 8):
+        r = grid[str(bits)]
+        print(f"  {bits:>5}  " + "  ".join(f"{r[str(L)]:+7.4f}" for L in (1, 4, 8)))
+    print("  (paper: monotone in L and in lower bit-width; threshold 0.01% at"
+          " production scale — the reduced model tolerates more)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Paper Fig. 11: overall write-bandwidth and storage-capacity reduction of
+quantization + incremental checkpointing vs. the fp32 full-checkpoint
+baseline, for jobs expecting L ∈ {1, 3, 20, 100} restores (which selects the
+bit-width per §5.2.1).
+
+Measured end-to-end through the real manager + store, metadata included.
+Paper headline: 6–17× bandwidth, 2.5–8× capacity.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, PAPER_DEFAULTS, Snapshot
+from repro.core.bitwidth import select_bits
+from .incremental_policies import _interval_touched
+
+
+def _simulate(policy, quant, rows, dim, touch, seed=0):
+    rng = np.random.default_rng(seed)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy=policy, quant=quant, async_write=False, keep_latest=1,
+        chunk_rows=100_000,
+        aux_bits=8 if quant is not None else None))  # beyond-paper: 8-bit acc
+    table = rng.normal(size=(rows, dim)).astype(np.float32)
+    acc = np.abs(rng.normal(size=rows)).astype(np.float32)
+    sizes, caps = [], []
+    for i, m in enumerate(touch):
+        table[m] += 0.01
+        acc[m] += 0.001
+        snap = Snapshot(step=i + 1, tables={"emb": table.copy()},
+                        row_state={"emb": {"acc": acc.copy()}},
+                        touched={"emb": m.copy()}, dense={}, extra={})
+        res = mgr.save(snap).result()
+        sizes.append(res.nbytes)
+        caps.append(store.total_bytes("chunks/"))
+    mgr.close()
+    return float(np.mean(sizes)), float(np.max(caps))
+
+
+def run(out_dir: str = "results", *, rows: int = 200_000, dim: int = 64,
+        n_intervals: int = 12, seed: int = 0) -> Dict:
+    touch = [_interval_touched(np.random.default_rng(seed + i), rows)
+             for i in range(n_intervals)]
+
+    base_bw, base_cap = _simulate("full_only", None, rows, dim, touch, seed)
+
+    table = {}
+    for L in (1, 3, 20, 100):
+        bits = select_bits(L)
+        bw, cap = _simulate("intermittent", PAPER_DEFAULTS[bits], rows, dim,
+                            touch, seed)
+        table[str(L)] = dict(bits=bits, bw_reduction=base_bw / bw,
+                             capacity_reduction=base_cap / cap)
+
+    out = dict(figure="fig11", baseline_bw_bytes=base_bw,
+               baseline_capacity_bytes=base_cap, reductions=table)
+    with open(f"{out_dir}/bench_combined_reduction.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+    print("Fig11 combined reduction vs fp32 full-checkpoint baseline:")
+    print("  L(restores)  bits  bandwidth×   capacity×")
+    for L, r in table.items():
+        print(f"  {L:>10}  {r['bits']:>4}  {r['bw_reduction']:9.2f}  "
+              f"{r['capacity_reduction']:10.2f}")
+    print("  (paper: 17×/8× at L<=1 down to 6×/2.5× at L>20)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Paper Figs. 8 & 9: per-interval checkpoint size (write bandwidth proxy)
+and required storage capacity for the three incremental policies.
+
+Uses the REAL checkpoint manager + in-memory object store: each interval
+applies a zipf-access touch pattern sized to the paper's ~26%-modified-per-
+interval regime, snapshots, and lets each policy write its checkpoint; sizes
+are measured from the store, metadata included.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, Snapshot
+from repro.data.synthetic import zipf_like
+
+
+def _interval_touched(rng, rows, frac_target=0.26):
+    """Draw zipf ids until ~frac_target of rows are touched."""
+    mask = np.zeros(rows, dtype=bool)
+    while mask.mean() < frac_target:
+        ids = zipf_like(rng, rows, 200_000)
+        mask[ids] = True
+    return mask
+
+
+def run(out_dir: str = "results", *, rows: int = 200_000, dim: int = 64,
+        n_intervals: int = 12, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    table0 = rng.normal(size=(rows, dim)).astype(np.float32)
+    touch = [_interval_touched(np.random.default_rng(seed + i), rows)
+             for i in range(n_intervals)]
+
+    results = {}
+    for policy in ("one_shot", "consecutive", "intermittent", "full_only"):
+        store = InMemoryStore()
+        mgr = CheckNRunManager(store, CheckpointConfig(
+            policy=policy, quant=None, async_write=False,
+            keep_latest=1, chunk_rows=100_000))
+        table = table0.copy()
+        sizes, capacity, kinds = [], [], []
+        for i in range(n_intervals):
+            m = touch[i]
+            table[m] += 0.01
+            snap = Snapshot(step=i + 1, tables={"emb": table.copy()},
+                            row_state={"emb": {}}, touched={"emb": m.copy()},
+                            dense={}, extra={})
+            res = mgr.save(snap).result()
+            sizes.append(res.nbytes)
+            kinds.append(res.kind)
+            capacity.append(store.total_bytes("chunks/"))
+        model_bytes = table.nbytes
+        results[policy] = dict(
+            interval_size_frac=[s / model_bytes for s in sizes],
+            capacity_frac=[c / model_bytes for c in capacity],
+            kinds=kinds,
+            avg_bw_frac=float(np.mean(sizes) / model_bytes),
+            max_capacity_frac=float(np.max(capacity) / model_bytes),
+        )
+        mgr.close()
+
+    out = dict(figure="fig8_fig9", rows=rows, n_intervals=n_intervals,
+               policies=results)
+    with open(f"{out_dir}/bench_incremental_policies.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+    print("Fig8 per-interval checkpoint size (fraction of model):")
+    for p, r in results.items():
+        marks = "".join("F" if k == "full" else "i" for k in r["kinds"])
+        print(f"  {p:<13} [{marks}] " +
+              " ".join(f"{x:.2f}" for x in r["interval_size_frac"]))
+    print("Fig9 storage capacity (fraction of model):")
+    for p, r in results.items():
+        print(f"  {p:<13} " + " ".join(f"{x:.2f}" for x in r["capacity_frac"]))
+    print("averages:")
+    for p, r in results.items():
+        print(f"  {p:<13} avg-bw {r['avg_bw_frac']:.3f}×model  "
+              f"max-capacity {r['max_capacity_frac']:.3f}×model")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Roofline analysis (deliverable g) per (arch × shape × mesh):
+
+    compute term    = executed_FLOPs / peak_FLOP/s
+    memory term     = HBM_bytes / HBM_bw
+    collective term = wire_bytes / (links_per_chip × link_bw)
+
+Term sources: the analytic per-device cost model in benchmarks/analytic.py
+(formula-derived from the model structure — XLA's cost_analysis counts
+while-loop bodies once and so under-reports every scanned model; see
+analytic.py docstring). The dry-run JSONs contribute the compile proof, the
+per-device peak-memory fit, and the collective-op inventory; their raw
+(loop-bodies-once) numbers are carried along for reference.
+
+MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE) / 2·N·D (serve) —
+the "useful" fraction column is MODEL_FLOPS / executed_FLOPs (remat and
+attention overhead lower it below 1).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12        # bf16 / chip (v5e)
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+LINKS_PER_CHIP = 4         # v5e 2D torus (±x, ±y)
+
+
+def analyze_record(d: dict) -> dict:
+    from .analytic import cell_terms
+
+    n_dev = d["n_devices"]
+    terms = cell_terms(d["arch"], d["shape"], d["mesh"])
+    t_compute = terms["flops"] / PEAK_FLOPS
+    t_memory = terms["hbm"] / HBM_BW
+    t_coll = terms["coll"] / (LINKS_PER_CHIP * ICI_BW)
+    tt = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    dominant = max(tt, key=tt.get)
+    bound = max(tt.values())
+    model_flops_dev = (d.get("model_flops") or 0.0) / n_dev
+    useful = model_flops_dev / terms["flops"] if terms["flops"] else 0.0
+    frac = (model_flops_dev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return dict(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], kind=d["kind"],
+        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+        dominant=dominant, step_lower_bound_s=bound,
+        model_flops_ratio=useful, roofline_fraction=frac,
+        temp_gib=d["memory"]["temp_size"] / 2**30,
+        hlo_flops_per_loopbody=d.get("flops"),
+        hlo_collective_bytes=d["collectives"].get("wire_total"),
+        collective_op_counts=d["collectives"].get("counts"),
+    )
+
+
+def run(out_dir: str = "results", mesh: str = "pod") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"dryrun_*_{mesh}.json"))):
+        d = json.load(open(path))
+        if d.get("status") != "ok":
+            rows.append(dict(arch=d["arch"], shape=d["shape"], error=d.get("error")))
+            continue
+        rows.append(analyze_record(d))
+    with open(os.path.join(out_dir, f"roofline_{mesh}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+    print(f"Roofline table ({mesh} mesh; analytic per-device terms, ms):")
+    print(f"  {'arch':<16}{'shape':<15}{'cmp':>8}{'mem':>8}{'coll':>8}"
+          f"{'dominant':>11}{'useful':>8}{'roofl%':>8}{'tempGiB':>9}")
+    for r in rows:
+        if "error" in r:
+            print(f"  {r['arch']:<16}{r['shape']:<15} ERROR {r['error'][:50]}")
+            continue
+        print(f"  {r['arch']:<16}{r['shape']:<15}"
+              f"{r['compute_s']*1e3:8.2f}{r['memory_s']*1e3:8.2f}"
+              f"{r['collective_s']*1e3:8.2f}{r['dominant']:>11}"
+              f"{r['model_flops_ratio']:8.2f}{100*r['roofline_fraction']:8.1f}"
+              f"{r['temp_gib']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "pod")

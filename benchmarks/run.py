@@ -1,0 +1,61 @@
+"""Benchmark driver: one benchmark per paper table/figure + roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sizes for CI")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    from . import (accuracy_restores, combined_reduction, incremental_policies,
+                   modified_fraction, quant_loss, roofline)
+
+    t0 = time.monotonic()
+    banner = lambda s: print(f"\n=== {s} " + "=" * max(0, 66 - len(s)))
+
+    banner("Figs 3/4 — modified fraction (incremental-checkpoint motivation)")
+    if args.fast:
+        modified_fraction.run(args.out, rows=200_000, samples_per_interval=20_000)
+    else:
+        modified_fraction.run(args.out)
+
+    banner("Figs 5/6/7 — checkpoint quantization mean-l2")
+    quant_loss.run(args.out, rows=1024 if args.fast else 4096)
+
+    banner("Figs 8/9 — incremental policies: bandwidth + capacity")
+    incremental_policies.run(args.out, rows=50_000 if args.fast else 200_000)
+
+    banner("Fig 10 — accuracy degradation vs restores")
+    accuracy_restores.run(args.out, total_steps=30 if args.fast else 80)
+
+    banner("Fig 11 — combined bandwidth/capacity reduction")
+    combined_reduction.run(args.out, rows=50_000 if args.fast else 200_000)
+
+    banner("Roofline (from dry-run artifacts, if present)")
+    import glob
+    if glob.glob(os.path.join(args.out, "dryrun_*_pod.json")):
+        roofline.run(args.out, mesh="pod")
+        if glob.glob(os.path.join(args.out, "dryrun_*_multipod.json")):
+            roofline.run(args.out, mesh="multipod")
+    else:
+        print("  (no dry-run JSONs found — run `python -m repro.launch.dryrun --all` first)")
+
+    print(f"\nall benchmarks done in {time.monotonic()-t0:.1f}s; "
+          f"JSON artifacts in {args.out}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Online training (paper §1/§4.1): consecutive-increment checkpoints are
+streamed to an inference replica, which applies each increment directly to
+its in-memory model — the checkpoint frequency bounds how stale serving is.
+
+  PYTHONPATH=src python examples/online_training.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_cell
+from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, PAPER_DEFAULTS
+from repro.core import manifest as mf
+from repro.data.cells import batch_for_cell
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.state import restore_train_state
+
+
+def main():
+    bundle = get_cell("dlrm-rm2", "train_batch", reduced=True)
+    store = InMemoryStore()
+    ckpt = CheckpointConfig(interval_batches=5, policy="consecutive",
+                            quant=PAPER_DEFAULTS[8], async_write=False,
+                            keep_latest=100)  # online training keeps the chain
+    trainer = Trainer(bundle, store, ckpt, TrainerConfig(total_steps=25,
+                                                         log_every=5))
+    trainer.init_or_restore()
+
+    # the "inference side": restores whatever the latest published ckpt is
+    serving_mgr = CheckNRunManager(store, ckpt)
+    serve_fn = jax.jit(lambda p, b: __import__("repro.models.dlrm", fromlist=["serve"])
+                       .serve(p, b, bundle.cfg))
+    eval_batch = batch_for_cell(bundle, 999)
+
+    published = []
+    for phase in range(5):
+        trainer.run(5)
+        trainer.manager.wait()
+        step = mf.latest_step(store)
+        man = mf.load(store, step)
+        restored = serving_mgr.restore(step)
+        serving_state = restore_train_state(bundle.make_state(), restored,
+                                            bundle.tracked)
+        scores = serve_fn(serving_state.params,
+                          {k: eval_batch[k] for k in ("dense", "sparse_ids")})
+        published.append((step, man.kind, man.nbytes_total,
+                          float(np.mean(np.asarray(scores)))))
+
+    print("published online-training increments:")
+    print("  step   kind          bytes   mean-serving-score")
+    for s, k, n, sc in published:
+        print(f"  {s:>4}   {k:<12} {n:>8}   {sc:.4f}")
+    inc = [n for _, k, n, _ in published if k == "incremental"]
+    full = [n for _, k, n, _ in published if k == "full"]
+    if inc and full:
+        print(f"\nincrement size ≈ {np.mean(inc)/full[0]:.2%} of the full model "
+              f"→ inference refresh at {ckpt.interval_batches}-batch cadence "
+              "costs a fraction of a full publish")
+    trainer.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter DLRM for a few
+hundred steps with the full Check-N-Run stack — reader tier with the exact-N
+lease protocol, incremental+quantized async checkpoints to a bandwidth-
+throttled store, dynamic bit-width selection, failure injection + recovery.
+
+  PYTHONPATH=src python examples/train_dlrm_checkpointed.py [--steps 200] [--fast]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs._families import recsys_cell
+from repro.core import CheckpointConfig, InMemoryStore, ThrottledStore
+from repro.core.bitwidth import BitwidthController
+from repro.models.dlrm import DLRMConfig
+from repro.models.embedding import pad_rows
+from repro.train.loop import SimulatedFailure, Trainer, TrainerConfig
+
+# ~100M params: 1.9M embedding rows × dim 64 ≈ 120M + MLPs
+VOCABS_100M = tuple(pad_rows(v) for v in
+                    (300_000,) * 4 + (100_000,) * 6 + (10_000,) * 8 + (1_000,) * 8)
+
+
+def make_bundle(batch: int):
+    cfg = DLRMConfig(name="dlrm-100m", vocab_sizes=VOCABS_100M, embed_dim=64)
+    bundle = recsys_cell("dlrm-rm2", cfg, "train_batch", mesh=None, reduced=True)
+    # override the reduced batch with the requested one
+    import repro.configs.shapes as S
+    spec = dict(S.RECSYS_SHAPES_REDUCED["train_batch"])
+    spec["batch"] = batch
+    saved = S.RECSYS_SHAPES_REDUCED["train_batch"]
+    S.RECSYS_SHAPES_REDUCED["train_batch"] = spec
+    try:
+        bundle = recsys_cell("dlrm-rm2", cfg, "train_batch", mesh=None, reduced=True)
+    finally:
+        S.RECSYS_SHAPES_REDUCED["train_batch"] = saved
+    return bundle
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        args.steps, args.batch = 40, 256
+
+    bundle = make_bundle(args.batch)
+    n_params = sum(np.prod(l.shape) for l in
+                   jax.tree_util.tree_leaves(bundle.params_shapes()))
+    print(f"DLRM with {n_params/1e6:.1f}M parameters, batch {args.batch}")
+
+    # remote object storage emulated at 2 GB/s write bandwidth
+    store = ThrottledStore(InMemoryStore(), write_bytes_per_sec=2e9)
+    # dynamic bit-width: 128 nodes, measured failure rate, 3-day job
+    bw = BitwidthController(n_nodes=128, p_node_fail_per_hour=2e-4,
+                            expected_train_hours=72)
+    print(f"expected failures {bw.estimate:.2f} → {bw.bits}-bit checkpoints")
+
+    ckpt = CheckpointConfig(interval_batches=25, policy="intermittent",
+                            async_write=True, overlap="wait")
+    trainer = Trainer(bundle, store, ckpt,
+                      TrainerConfig(total_steps=args.steps, log_every=20),
+                      bitwidth=bw)
+    trainer.init_or_restore()
+
+    fail_at = args.steps * 2 // 3
+    t0 = time.monotonic()
+    try:
+        trainer.run(args.steps, fail_at_step=fail_at)
+    except SimulatedFailure as e:
+        print(f"!! {e}")
+    trainer.manager.wait()
+    trainer.close()
+
+    print("recovering...")
+    t2 = Trainer(bundle, store, ckpt,
+                 TrainerConfig(total_steps=args.steps, log_every=20),
+                 bitwidth=bw)
+    start = t2.init_or_restore()
+    print(f"   restored at step {start} "
+          f"(retrained work: {fail_at - start} steps)")
+    t2.run(args.steps - start)
+    t2.manager.wait()
+    wall = time.monotonic() - t0
+
+    for m in t2.history:
+        print(f"  step {m['step']:>4}  loss {m['loss']:.4f}  acc {m.get('accuracy', 0):.3f}")
+
+    model_bytes = sum(np.asarray(v).nbytes
+                      for v in jax.tree_util.tree_leaves(t2.state.params))
+    stats = store.counters.snapshot()
+    n_ckpts = args.steps // ckpt.interval_batches + 1
+    stall = sum(trainer.stall_times) + sum(t2.stall_times)
+    print(f"\nmodel {model_bytes/1e6:.0f} MB | wrote {stats['bytes_written']/1e6:.0f} MB "
+          f"for ~{n_ckpts} checkpoints → {model_bytes*n_ckpts/stats['bytes_written']:.1f}× "
+          f"bandwidth reduction vs fp32 fulls")
+    print(f"snapshot stall: {stall:.2f}s of {wall:.1f}s total "
+          f"({100*stall/wall:.2f}% — paper target <0.4%)")
+    t2.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: Check-N-Run — incremental + quantized checkpointing for training
+recommendation (and other large) models at scale, in JAX.
+
+Paper: Eisenman et al., "Check-N-Run: A Checkpointing System for Training
+Deep Learning Recommendation Models" (arXiv:2010.08679).
+"""
+
+__version__ = "1.0.0"

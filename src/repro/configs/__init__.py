@@ -1,0 +1,54 @@
+"""Architecture registry: ``get_cell(arch, shape)`` → CellBundle.
+
+10 assigned architectures × their shape sets = 40 dry-run cells.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List, Optional
+
+from jax.sharding import Mesh
+
+from ._families import CellBundle
+from .shapes import FAMILY_SHAPES, FAMILY_SHAPES_REDUCED
+
+_ARCH_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "dbrx-132b": "dbrx_132b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "minicpm3-4b": "minicpm3_4b",
+    "dimenet": "dimenet",
+    "xdeepfm": "xdeepfm",
+    "dlrm-rm2": "dlrm_rm2",
+    "mind": "mind",
+    "bert4rec": "bert4rec",
+}
+
+ARCHS: List[str] = list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    try:
+        mod_name = _ARCH_MODULES[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; have {ARCHS}")
+    return importlib.import_module(f".{mod_name}", __package__)
+
+
+def arch_family(arch: str) -> str:
+    return _module(arch).FAMILY
+
+
+def arch_shapes(arch: str) -> List[str]:
+    return list(FAMILY_SHAPES[arch_family(arch)])
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s) for a in ARCHS for s in arch_shapes(a)]
+
+
+def get_cell(arch: str, shape: str, mesh: Optional[Mesh] = None,
+             reduced: bool = False) -> CellBundle:
+    return _module(arch).make_cell(shape, mesh=mesh, reduced=reduced)

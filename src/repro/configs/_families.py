@@ -1,0 +1,451 @@
+"""Family-level cell builders: (arch config × shape) → CellBundle.
+
+A CellBundle is everything one dry-run / smoke-test / train cell needs:
+the step callable, ShapeDtypeStruct input specs, PartitionSpecs for inputs
+and state, tracked specs for Check-N-Run, and the MODEL_FLOPS estimate used
+by the roofline report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..dist.sharding import NO_SHARDING, ShardingRules, gnn_rules, lm_rules, recsys_rules
+from ..models import bert4rec as m_bert4rec
+from ..models import dimenet as m_dimenet
+from ..models import dlrm as m_dlrm
+from ..models import mind as m_mind
+from ..models import transformer as m_tf
+from ..models import xdeepfm as m_xdeepfm
+from ..optim.optimizers import adagrad, rowwise_adagrad, split_optimizer
+from ..train.state import TrackedSpec, TrainState, init_train_state
+from ..train.steps import make_train_step
+from . import shapes as S
+
+
+@dataclasses.dataclass
+class CellBundle:
+    arch: str
+    shape: str
+    kind: str                       # train | serve | prefill | decode | retrieval
+    cfg: Any
+    rules: ShardingRules
+    init: Callable                  # key -> params
+    loss_fn: Optional[Callable]     # (params, batch) -> (loss, aux)   [train]
+    step_fn: Callable               # train: (state, batch); serve: (params, batch)
+    make_inputs: Callable           # () -> dict of ShapeDtypeStruct
+    input_pspecs: Any
+    param_axes_fn: Callable         # (path_str, shape) -> logical axes tuple
+    tracked: Dict[str, TrackedSpec]
+    optimizer: Any
+    model_flops: float
+    notes: str = ""
+
+    # ------------------------------------------------ derived specs
+    def params_shapes(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def params_pspecs(self, params_shapes=None):
+        ps = params_shapes if params_shapes is not None else self.params_shapes()
+        return tree_pspecs(ps, self.rules, self.param_axes_fn)
+
+    def state_shapes(self):
+        def mk():
+            params = self.init(jax.random.key(0))
+            return init_train_state(params, self.optimizer, self.tracked,
+                                    jax.random.key(1))
+        return jax.eval_shape(mk)
+
+    def state_pspecs(self, state_shapes=None):
+        st = state_shapes if state_shapes is not None else self.state_shapes()
+        params_p = tree_pspecs(st.params, self.rules, self.param_axes_fn)
+        opt_p = tree_pspecs(st.opt_state, self.rules, self.param_axes_fn)
+        touched_p = {}
+        for name, leaf in st.touched.items():
+            spec = self.tracked[name]
+            ax = ("embed_rows",) if spec.path[0] == "tables" else (None,)
+            touched_p[name] = self.rules.pspec(*ax, dims=leaf.shape)
+        return TrainState(step=P(), params=params_p, opt_state=opt_p,
+                          touched=touched_p, rng=P())
+
+    def make_state(self, key=None) -> TrainState:
+        key = jax.random.key(0) if key is None else key
+        params = self.init(key)
+        return init_train_state(params, self.optimizer, self.tracked,
+                                jax.random.key(1))
+
+
+def tree_pspecs(tree, rules: ShardingRules, axes_fn):
+    def leaf_spec(path, leaf):
+        key = jax.tree_util.keystr(path)
+        axes = axes_fn(key, leaf.shape)
+        return rules.pspec(*axes, dims=leaf.shape)
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# =====================================================================
+# LM family
+# =====================================================================
+
+
+def lm_param_axes(path: str, shape: Tuple[int, ...]):
+    nd = len(shape)
+    if "tok_emb" in path:
+        return ("embed_rows", None) if nd == 2 else ("embed_rows",)
+    if "w_out" in path:
+        return ("d_model", "vocab")
+    if any(k in path for k in ("['wq']", "['wk']", "['wv']")):
+        ax = ("d_model", "heads" if "wq" in path else "kv_heads", None)
+        return ((None,) + ax) if nd == 4 else ax
+    if "['wo']" in path:
+        return (None, "heads", None, "d_model")[-nd:]
+    if any(k in path for k in ("['bq']", "['bk']", "['bv']")):
+        return (None, "heads", None)[-nd:]
+    if any(k in path for k in ("['w1']", "['wg']")):
+        return (None, "d_model", "ff")[-nd:]
+    if "['w2']" in path:
+        return (None, "ff", "d_model")[-nd:]
+    if "router" in path:
+        return (None, "d_model", None)[-nd:]
+    if any(k in path for k in ("['w_up']", "['w_gate']")):
+        return (None, "experts", "d_model", None)[-nd:]
+    if "['w_down']" in path:
+        return (None, "experts", None, "d_model")[-nd:]
+    # MLA blocks
+    if "['w_dq']" in path or "['w_dkv']" in path or "['w_kpe']" in path:
+        return (None, "d_model", None)[-nd:]
+    if "['w_uq']" in path or "['w_uk']" in path or "['w_uv']" in path:
+        return (None, None, "heads", None)[-nd:]
+    if "['w_o']" in path:
+        return (None, "heads", None, "d_model")[-nd:]
+    return (None,) * nd
+
+
+def _lm_cache_pspec(cfg: m_tf.TransformerConfig, rules: ShardingRules,
+                    batch: int, max_len: int):
+    if rules.mesh is None:
+        return None
+    model_n = rules.mesh.shape.get("model", 1)
+    batch_ax = rules.pspec("batch", dims=(batch,))[0]
+    if cfg.mla:
+        seq_ax = "model" if max_len % model_n == 0 else None
+        return dict(ckv=P(None, batch_ax, seq_ax, None),
+                    kpe=P(None, batch_ax, seq_ax, None))
+    if cfg.n_kv_heads % model_n == 0:
+        return dict(k=P(None, batch_ax, None, "model", None),
+                    v=P(None, batch_ax, None, "model", None))
+    seq_ax = "model" if max_len % model_n == 0 else None
+    return dict(k=P(None, batch_ax, seq_ax, None, None),
+                v=P(None, batch_ax, seq_ax, None, None))
+
+
+def lm_cell(arch: str, cfg: m_tf.TransformerConfig, shape: str,
+            mesh: Optional[Mesh] = None, reduced: bool = False) -> CellBundle:
+    spec = (S.LM_SHAPES_REDUCED if reduced else S.LM_SHAPES)[shape]
+    kind = spec["kind"]
+    rules = lm_rules(mesh, pure_fsdp=(cfg.pure_fsdp_train and kind == "train"
+                                      and not reduced))
+    seq, gb = spec["seq_len"], spec["global_batch"]
+    tracked = m_tf.tracked_specs(cfg)
+    optimizer = split_optimizer(rowwise_adagrad(0.01), adagrad(0.01))
+
+    loss_fn = lambda params, batch: m_tf.train_loss(params, batch, cfg, rules)
+    tok = jnp.int32
+
+    if kind == "train":
+        # micro-batching: 4 accumulation steps on the production shape keeps
+        # per-microbatch activations within HBM (§Perf iteration)
+        n_micro = 4 if (not reduced and gb >= 64) else 1
+        step_fn = make_train_step(loss_fn, optimizer, n_micro=n_micro)
+        make_inputs = lambda: dict(tokens=_sds((gb, seq), tok),
+                                   labels=_sds((gb, seq), tok))
+        input_pspecs = dict(tokens=rules.pspec("batch", None, dims=(gb, seq)),
+                            labels=rules.pspec("batch", None, dims=(gb, seq)))
+        flops = 6.0 * cfg.active_param_count * gb * seq
+    elif kind == "prefill":
+        def step_fn(params, batch):
+            return m_tf.prefill_step(params, batch["tokens"], cfg, rules)
+        make_inputs = lambda: dict(tokens=_sds((gb, seq), tok))
+        input_pspecs = dict(tokens=rules.pspec("batch", None, dims=(gb, seq)))
+        flops = 2.0 * cfg.active_param_count * gb * seq
+    elif kind == "decode":
+        cache_dtype = jnp.bfloat16
+
+        def step_fn(params, batch):
+            return m_tf.decode_step(params, batch["tokens"], batch["cache"],
+                                    batch["cache_len"], cfg, rules)
+
+        def make_inputs():
+            cache = jax.eval_shape(lambda: m_tf.init_cache(cfg, gb, seq, cache_dtype))
+            return dict(tokens=_sds((gb, 1), tok), cache=cache,
+                        cache_len=_sds((), jnp.int32))
+        input_pspecs = dict(tokens=rules.pspec("batch", None, dims=(gb, 1)),
+                            cache=_lm_cache_pspec(cfg, rules, gb, seq),
+                            cache_len=P())
+        # decode flops: params read once per token + attention over the cache
+        if cfg.mla:
+            attn = 2.0 * gb * cfg.n_heads * seq * (cfg.mla.kv_lora_rank * 2)
+        else:
+            attn = 4.0 * gb * cfg.n_heads * seq * cfg.head_dim
+        flops = 2.0 * cfg.active_param_count * gb + cfg.n_layers * attn
+    else:
+        raise ValueError(kind)
+
+    return CellBundle(
+        arch=arch, shape=shape, kind=kind, cfg=cfg, rules=rules,
+        init=lambda key: m_tf.init_params(key, cfg),
+        loss_fn=loss_fn if kind == "train" else None,
+        step_fn=step_fn, make_inputs=make_inputs, input_pspecs=input_pspecs,
+        param_axes_fn=lm_param_axes, tracked=tracked, optimizer=optimizer,
+        model_flops=flops)
+
+
+# =====================================================================
+# Recsys family
+# =====================================================================
+
+
+def recsys_param_axes(path: str, shape: Tuple[int, ...]):
+    nd = len(shape)
+    if "tables" in path or "emb_" in path or "lin_" in path or "item_" in path:
+        return ("embed_rows",) + (None,) * (nd - 1)
+    if "out_bias" in path:
+        return ("embed_rows",)[-nd:] if nd == 1 else (None,) * nd
+    return (None,) * nd
+
+
+def _recsys_stream(arch: str, cfg, shape_spec: dict, reduced: bool):
+    """Input structure per recsys arch (data + spec builders share this)."""
+    B = shape_spec.get("batch", 1)
+    if arch in ("dlrm-rm2", "xdeepfm"):
+        F = cfg.n_sparse
+        H = cfg.multi_hot
+        d = dict(sparse_ids=((B, F, H), jnp.int32), label=((B,), jnp.float32))
+        if getattr(cfg, "n_dense", 0):
+            d["dense"] = ((B, cfg.n_dense), jnp.float32)
+        return d
+    if arch == "mind":
+        n_neg = 128 if reduced else 1024
+        return dict(hist=((B, cfg.hist_len), jnp.int32), target=((B,), jnp.int32),
+                    neg_ids=((n_neg,), jnp.int32))
+    if arch == "bert4rec":
+        n_neg = 64 if reduced else 256
+        return dict(items=((B, cfg.seq_len), jnp.int32),
+                    labels=((B, cfg.seq_len), jnp.int32),
+                    mask=((B, cfg.seq_len), jnp.bool_),
+                    neg_ids=((n_neg,), jnp.int32))
+    raise ValueError(arch)
+
+
+_RECSYS_MODULES = {"dlrm-rm2": m_dlrm, "xdeepfm": m_xdeepfm, "mind": m_mind,
+                   "bert4rec": m_bert4rec}
+
+
+def recsys_dense_flops(arch: str, cfg, batch: int) -> float:
+    """Analytic fwd FLOPs per example × batch (matmul-dominated terms)."""
+    if arch == "dlrm-rm2":
+        dims = (cfg.n_dense,) + cfg.bot_mlp
+        f = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        Ft = cfg.n_sparse + 1
+        f += 2 * Ft * Ft * cfg.embed_dim  # dot interaction
+        dims = (cfg.embed_dim + cfg.n_interact,) + cfg.top_mlp
+        f += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        return float(f) * batch
+    if arch == "xdeepfm":
+        F, D = cfg.n_sparse, cfg.embed_dim
+        f = 0.0
+        h_prev = F
+        for h in cfg.cin_layers:
+            f += 2 * h_prev * F * D          # outer product
+            f += 2 * h * h_prev * F * D      # compression
+            h_prev = h
+        dims = (F * D,) + cfg.mlp + (1,)
+        f += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        return float(f) * batch
+    if arch == "mind":
+        T, D, K = cfg.hist_len, cfg.embed_dim, cfg.n_interests
+        f = 2 * T * D * D + cfg.capsule_iters * (3 * 2 * T * K * D)
+        return float(f) * batch
+    if arch == "bert4rec":
+        Sq, D = cfg.seq_len, cfg.embed_dim
+        per_block = 8 * D * D * Sq + 4 * Sq * Sq * D + 4 * D * cfg.d_ff * Sq
+        return float(cfg.n_blocks * per_block) * batch
+    raise ValueError(arch)
+
+
+def recsys_cell(arch: str, cfg, shape: str, mesh: Optional[Mesh] = None,
+                reduced: bool = False) -> CellBundle:
+    spec = (S.RECSYS_SHAPES_REDUCED if reduced else S.RECSYS_SHAPES)[shape]
+    rules = recsys_rules(mesh)
+    mod = _RECSYS_MODULES[arch]
+    kind = spec["kind"]
+    B = spec["batch"]
+    tracked = mod.tracked_specs(cfg)
+    optimizer = split_optimizer(rowwise_adagrad(0.01), adagrad(0.01))
+    loss_fn = lambda params, batch: mod.train_loss(params, batch, cfg, rules)
+
+    stream = _recsys_stream(arch, cfg, spec, reduced)
+
+    def specs_from(stream_d, extra=None):
+        d = {k: _sds(sh, dt) for k, (sh, dt) in stream_d.items()}
+        if extra:
+            d.update(extra)
+        return d
+
+    def pspecs_from(stream_d, extra=None):
+        d = {k: rules.pspec("batch", *([None] * (len(sh) - 1)), dims=sh)
+             if sh and sh[0] == B and len(sh) >= 1 and k != "neg_ids"
+             else rules.pspec(*([None] * len(sh)), dims=sh)
+             for k, (sh, dt) in stream_d.items()}
+        if extra:
+            d.update(extra)
+        return d
+
+    if kind == "train":
+        n_micro = 4 if (not reduced and B >= 65536 and arch == "bert4rec") else 1
+        if arch == "dlrm-rm2":
+            # §Perf iteration R2: sparse embedding update (see models/dlrm.py)
+            step_fn = m_dlrm.make_sparse_train_step(cfg, rules, adagrad(0.01))
+        else:
+            step_fn = make_train_step(loss_fn, optimizer, n_micro=n_micro)
+        make_inputs = lambda: specs_from(stream)
+        input_pspecs = pspecs_from(stream)
+        flops = 3.0 * recsys_dense_flops(arch, cfg, B)  # fwd+bwd ≈ 3× fwd
+    elif kind == "serve":
+        serve_stream = {k: v for k, v in stream.items()
+                        if k not in ("label", "labels", "mask", "neg_ids")}
+        if arch == "bert4rec":
+            serve_stream = dict(items=stream["items"],
+                                candidate_ids=((B, 100), jnp.int32))
+        def step_fn(params, batch):
+            return mod.serve(params, batch, cfg, rules)
+        make_inputs = lambda: specs_from(serve_stream)
+        input_pspecs = pspecs_from(serve_stream)
+        flops = recsys_dense_flops(arch, cfg, B)
+    elif kind == "retrieval":
+        C = spec["n_candidates"]
+        user_stream = {k: ((1,) + sh[1:], dt) for k, (sh, dt) in stream.items()
+                       if k not in ("label", "labels", "mask", "neg_ids", "target")}
+        extra_spec = dict(candidate_ids=_sds((C,), jnp.int32))
+        extra_p = dict(candidate_ids=rules.pspec("candidates", dims=(C,)))
+        def step_fn(params, batch):
+            return mod.serve_retrieval(params, batch, cfg, rules)
+        make_inputs = lambda: specs_from(user_stream, extra_spec)
+        input_pspecs = pspecs_from(user_stream, extra_p)
+        flops = recsys_dense_flops(arch, cfg, 1) + 2.0 * C * cfg.embed_dim * (
+            getattr(cfg, "n_interests", 1))
+        if arch in ("dlrm-rm2", "xdeepfm"):
+            flops = recsys_dense_flops(arch, cfg, C)  # per-candidate top path
+    else:
+        raise ValueError(kind)
+
+    return CellBundle(
+        arch=arch, shape=shape, kind=kind, cfg=cfg, rules=rules,
+        init=lambda key: mod.init_params(key, cfg),
+        loss_fn=loss_fn if kind == "train" else None,
+        step_fn=step_fn, make_inputs=make_inputs, input_pspecs=input_pspecs,
+        param_axes_fn=recsys_param_axes, tracked=tracked, optimizer=optimizer,
+        model_flops=flops)
+
+
+# =====================================================================
+# GNN family (dimenet)
+# =====================================================================
+
+
+def gnn_param_axes(path: str, shape: Tuple[int, ...]):
+    nd = len(shape)
+    if "species" in path:
+        return ("embed_rows",) + (None,) * (nd - 1)
+    return (None,) * nd
+
+
+def dimenet_flops(cfg: m_dimenet.DimeNetConfig, n_nodes, n_edges, n_tri,
+                  batch=1) -> float:
+    h, nb = cfg.d_hidden, cfg.n_bilinear
+    per_block = (2 * n_edges * h * h            # w_msg
+                 + 2 * n_tri * cfg.n_sbf * nb   # sbf proj
+                 + 2 * n_tri * nb * h * h       # bilinear
+                 + 2 * n_edges * h * h * 2      # mlp
+                 + 2 * n_edges * h * h)         # out proj
+    f = cfg.n_blocks * per_block + 2 * n_edges * 3 * h * h
+    return float(f) * batch
+
+
+def gnn_cell(arch: str, base_cfg: m_dimenet.DimeNetConfig, shape: str,
+             mesh: Optional[Mesh] = None, reduced: bool = False) -> CellBundle:
+    spec = (S.GNN_SHAPES_REDUCED if reduced else S.GNN_SHAPES)[shape]
+    rules = gnn_rules(mesh)
+    tpe = spec["triplets_per_edge"]
+
+    if shape == "molecule":
+        cfg = dataclasses.replace(base_cfg, d_feat=0, n_out=1)
+        B, N, E = spec["batch"], spec["n_nodes"], spec["n_edges"]
+        T = tpe * E
+        make_inputs = lambda: dict(
+            species=_sds((B, N), jnp.int32), pos=_sds((B, N, 3), jnp.float32),
+            edge_src=_sds((B, E), jnp.int32), edge_dst=_sds((B, E), jnp.int32),
+            tri_kj=_sds((B, T), jnp.int32), tri_ji=_sds((B, T), jnp.int32),
+            energy=_sds((B,), jnp.float32))
+        bp = rules.pspec("batch", dims=(B,))
+        input_pspecs = {k: rules.pspec("batch", *([None] * n), dims=(B,) + (1,) * n)
+                        for k, n in [("species", 1), ("pos", 2), ("edge_src", 1),
+                                     ("edge_dst", 1), ("tri_kj", 1), ("tri_ji", 1),
+                                     ("energy", 0)]}
+        flops = 3.0 * dimenet_flops(cfg, N, E, T, batch=B)
+    else:
+        if shape == "minibatch_lg":
+            N, E = S.block_shape(spec)
+            n_seeds = spec["batch_nodes"]
+        else:
+            N, E = spec["n_nodes"], spec["n_edges"]
+            n_seeds = N
+        if not reduced:
+            # pad node/edge/triplet counts to divide the 512-chip mesh
+            # (range-partitioned in the sharded forward; pad rows inert)
+            N = ((N + 511) // 512) * 512
+            E = ((E + 511) // 512) * 512
+            n_seeds = N if n_seeds == spec.get("n_nodes", n_seeds) else n_seeds
+        T = tpe * E
+        cfg = dataclasses.replace(base_cfg, d_feat=spec["d_feat"],
+                                  n_out=spec["n_classes"])
+        def make_inputs():
+            d = dict(features=_sds((N, spec["d_feat"]), jnp.float32),
+                     edge_src=_sds((E,), jnp.int32), edge_dst=_sds((E,), jnp.int32),
+                     tri_kj=_sds((T,), jnp.int32), tri_ji=_sds((T,), jnp.int32),
+                     labels=_sds((n_seeds,), jnp.int32))
+            if n_seeds != N:
+                d["seed_idx"] = _sds((n_seeds,), jnp.int32)
+            return d
+        input_pspecs = dict(
+            features=rules.pspec("nodes", None, dims=(N, spec["d_feat"])),
+            edge_src=rules.pspec("edges", dims=(E,)),
+            edge_dst=rules.pspec("edges", dims=(E,)),
+            tri_kj=rules.pspec("triplets", dims=(T,)),
+            tri_ji=rules.pspec("triplets", dims=(T,)),
+            labels=rules.pspec(None, dims=(n_seeds,)))
+        if n_seeds != N:
+            input_pspecs["seed_idx"] = rules.pspec(None, dims=(n_seeds,))
+        flops = 3.0 * dimenet_flops(cfg, N, E, T)
+
+    tracked = m_dimenet.tracked_specs(cfg)
+    optimizer = split_optimizer(rowwise_adagrad(0.01), adagrad(0.01))
+    loss_fn = lambda params, batch: m_dimenet.train_loss(params, batch, cfg, rules)
+    step_fn = make_train_step(loss_fn, optimizer)
+
+    return CellBundle(
+        arch=arch, shape=shape, kind="train", cfg=cfg, rules=rules,
+        init=lambda key: m_dimenet.init_params(key, cfg),
+        loss_fn=loss_fn, step_fn=step_fn, make_inputs=make_inputs,
+        input_pspecs=input_pspecs, param_axes_fn=gnn_param_axes,
+        tracked=tracked, optimizer=optimizer, model_flops=flops)

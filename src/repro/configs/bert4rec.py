@@ -1,0 +1,20 @@
+"""BERT4Rec [arXiv:1904.06690]: dim 64, 2 blocks, 2 heads, seq 200,
+1M-item catalog, tied output embeddings."""
+
+from ..models.bert4rec import Bert4RecConfig
+from ._families import recsys_cell
+
+FAMILY = "recsys"
+
+
+def make_config(reduced: bool = False) -> Bert4RecConfig:
+    if reduced:
+        return Bert4RecConfig(name="bert4rec-reduced", n_items=2048,
+                              embed_dim=16, n_blocks=2, n_heads=2, seq_len=16,
+                              d_ff=64)
+    return Bert4RecConfig(name="bert4rec", n_items=1_000_448, embed_dim=64,
+                          n_blocks=2, n_heads=2, seq_len=200, d_ff=256)  # 1M padded to 512×
+
+
+def make_cell(shape: str, mesh=None, reduced: bool = False):
+    return recsys_cell("bert4rec", make_config(reduced), shape, mesh, reduced)

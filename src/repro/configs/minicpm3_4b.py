@@ -1,0 +1,33 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: 62L d2560 40H, MLA (q_lora 768,
+kv_lora 256, qk_nope 64, qk_rope 32, v 64), d_ff 6400, vocab 73448, SwiGLU."""
+
+from ..models.layers import MLAConfig
+from ..models.transformer import TransformerConfig
+from ._families import lm_cell
+
+FAMILY = "lm"
+
+
+def make_config(reduced: bool = False) -> TransformerConfig:
+    if reduced:
+        return TransformerConfig(
+            name="minicpm3-4b-reduced", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=4, head_dim=24, d_ff=128, vocab=512, act="silu",
+            gated=True,
+            mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16))
+    return TransformerConfig(
+        name="minicpm3-4b", n_layers=62, d_model=2560, n_heads=40,
+        n_kv_heads=40, head_dim=96, d_ff=6400, vocab=73472, act="silu",  # 73448 padded %16
+        # §Perf L2 attempt (REFUTED): pure_fsdp_train=True halves the analytic
+        # collective term (no TP/SP useful with 40 heads ∤ 16), but GSPMD
+        # hoists the FSDP gather out of the layer scan → 105 GiB/device.
+        # Kept off until per-layer shard_map weight gathers are implemented.
+        gated=True, pure_fsdp_train=False,
+
+        mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                      qk_rope_dim=32, v_head_dim=64))
+
+
+def make_cell(shape: str, mesh=None, reduced: bool = False):
+    return lm_cell("minicpm3-4b", make_config(reduced), shape, mesh, reduced)

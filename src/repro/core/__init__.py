@@ -1,0 +1,39 @@
+"""Check-N-Run core: incremental + quantized checkpointing for training at scale."""
+
+from .bitwidth import BitwidthController, expected_failures, select_bits
+from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
+from .incremental import (
+    ConsecutiveIncrement,
+    FullOnly,
+    IncrementalPolicy,
+    IntermittentBaseline,
+    OneShotBaseline,
+    make_policy,
+)
+from .quantize import (
+    PAPER_DEFAULTS,
+    KmeansQuantized,
+    QuantConfig,
+    Quantized,
+    adaptive_quantize,
+    dequantize,
+    kmeans_block_quantize,
+    kmeans_clustered_quantize,
+    kmeans_dequantize,
+    kmeans_quantize,
+    mean_l2_loss,
+    quantize,
+    uniform_quantize,
+)
+from .reader_protocol import ReaderLease, ReaderState
+from .snapshot import Snapshot, take_snapshot
+from .storage import (
+    CheckpointCancelled,
+    InMemoryStore,
+    LocalFSStore,
+    ObjectStore,
+    ThrottledStore,
+)
+from .tracker import init_touched, mark_touched, merge_touched, reset_touched, touched_fraction
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,390 @@
+"""The Check-N-Run checkpoint manager.
+
+Orchestrates the paper's three-stage workflow (§3.4):
+
+  1. in-memory snapshot (``repro.core.snapshot`` — the only training stall)
+  2. build an optimized checkpoint: incremental-policy row selection (§4.1)
+     + row-wise quantization (§4.2), chunk by chunk
+  3. write to the object store, then atomically commit the manifest
+
+plus recovery (baseline + increment replay, with dequantization), retention,
+non-overlapping write scheduling with cancellation (straggler mitigation,
+§3.3), and dynamic bit-width fallback (§5.2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import traceback
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from . import manifest as mf
+from . import packing
+from .bitwidth import BitwidthController
+from .incremental import IncrementalPolicy, make_policy
+from .quantize import (
+    PAPER_DEFAULTS,
+    QuantConfig,
+    Quantized,
+    dequantize,
+    quantize,
+)
+from .snapshot import Snapshot
+from .storage import CheckpointCancelled, ObjectStore
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    interval_batches: int = 1000
+    policy: str = "intermittent"          # full_only|one_shot|consecutive|intermittent
+    quant: Optional[QuantConfig] = dataclasses.field(
+        default_factory=lambda: PAPER_DEFAULTS[4])
+    async_write: bool = True
+    overlap: str = "wait"                  # "wait" | "cancel" (§3.3 non-overlap)
+    keep_latest: int = 1
+    ttl_days: float = 14.0
+    chunk_rows: int = 65536                # §3.4: quantize/store pipelined chunks
+    write_deadline_s: Optional[float] = None
+    aux_bits: Optional[int] = None         # beyond-paper: quantize 1-D f32 row
+                                           # aux (AdaGrad acc) per chunk (8-bit)
+
+
+@dataclasses.dataclass
+class SaveResult:
+    step: int
+    kind: str
+    nbytes: int
+    build_time_s: float
+    write_time_s: float
+    cancelled: bool = False
+
+
+@dataclasses.dataclass
+class RestoredState:
+    step: int
+    tables: Dict[str, np.ndarray]
+    row_state: Dict[str, Dict[str, np.ndarray]]
+    dense: Dict[str, np.ndarray]
+    extra: Dict[str, Any]
+    chain_len: int
+
+
+class CheckNRunManager:
+    """One manager per training job. Thread-safe for the single-trainer
+    single-writer pattern the paper uses."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        config: CheckpointConfig,
+        bitwidth: Optional[BitwidthController] = None,
+    ) -> None:
+        self.store = store
+        self.config = config
+        self.policy: IncrementalPolicy = make_policy(config.policy)
+        self.bitwidth = bitwidth
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="cnr-writer")
+        self._inflight: Optional[Future] = None
+        self._cancel = threading.Event()
+        # Touched-row bookkeeping (host side, see incremental.py semantics):
+        self._cum_touched: Dict[str, np.ndarray] = {}     # since last committed FULL
+        self._uncommitted: Dict[str, np.ndarray] = {}     # since last committed ckpt
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ save
+    def save(self, snap: Snapshot, block: bool = False) -> Future:
+        """Submit a snapshot for background checkpointing. Enforces the
+        paper's non-overlap rule: wait for, or cancel, the in-flight write."""
+        if self._inflight is not None and not self._inflight.done():
+            if self.config.overlap == "cancel":
+                self._cancel.set()
+                try:
+                    self._inflight.result()
+                except Exception:
+                    pass
+            else:
+                self._inflight.result()  # wait ("complete") — paper default
+        self._cancel = threading.Event()
+
+        with self._lock:
+            for name, t in snap.touched.items():
+                t = np.asarray(t, dtype=bool)
+                self._cum_touched[name] = (
+                    t if name not in self._cum_touched else self._cum_touched[name] | t)
+                self._uncommitted[name] = (
+                    t if name not in self._uncommitted else self._uncommitted[name] | t)
+            cum = {k: v.copy() for k, v in self._cum_touched.items()}
+            unc = {k: v.copy() for k, v in self._uncommitted.items()}
+
+        cancel = self._cancel
+        if self.config.async_write and not block:
+            fut = self._pool.submit(self._write_guarded, snap, cum, unc, cancel)
+        else:
+            fut: Future = Future()
+            try:
+                fut.set_result(self._write_guarded(snap, cum, unc, cancel))
+            except Exception as e:  # pragma: no cover
+                fut.set_exception(e)
+        self._inflight = fut
+        return fut
+
+    def wait(self) -> Optional[SaveResult]:
+        if self._inflight is None:
+            return None
+        return self._inflight.result()
+
+    def cancel_pending(self) -> None:
+        self._cancel.set()
+
+    def close(self) -> None:
+        try:
+            self.wait()
+        except Exception:
+            pass
+        self._pool.shutdown(wait=True)
+
+    # ------------------------------------------------------------- internals
+    def _write_guarded(self, snap, cum, unc, cancel) -> SaveResult:
+        try:
+            return self._write(snap, cum, unc, cancel)
+        except CheckpointCancelled:
+            return SaveResult(step=snap.step, kind="cancelled", nbytes=0,
+                              build_time_s=0.0, write_time_s=0.0, cancelled=True)
+        except Exception:
+            traceback.print_exc()
+            raise
+
+    def _select_rows(self, decision: str, name: str, rows: int,
+                     cum: Dict[str, np.ndarray], unc: Dict[str, np.ndarray]) -> np.ndarray:
+        if decision == "full":
+            return np.arange(rows, dtype=np.uint32)
+        mask = cum.get(name) if self.policy.cumulative_mask else unc.get(name)
+        if mask is None:  # untracked table -> always stored fully
+            return np.arange(rows, dtype=np.uint32)
+        return np.nonzero(mask)[0].astype(np.uint32)
+
+    def _quant_config(self) -> Optional[QuantConfig]:
+        if self.bitwidth is not None:
+            return self.bitwidth.current_config()
+        return self.config.quant
+
+    def _write(self, snap: Snapshot, cum, unc, cancel: threading.Event) -> SaveResult:
+        t_start = time.monotonic()
+        step = snap.step
+        decision = self.policy.decide(step)
+        qcfg = self._quant_config()
+        qcfg = qcfg.resolve() if qcfg is not None else None
+
+        tables: Dict[str, mf.TableRecord] = {}
+        total_bytes = 0
+        build_s = 0.0
+        write_s = 0.0
+
+        deadline = (time.monotonic() + self.config.write_deadline_s
+                    if self.config.write_deadline_s else None)
+
+        for name, tab in snap.tables.items():
+            rows, dim = tab.shape
+            sel = self._select_rows(decision, name, rows, cum, unc)
+            aux = snap.row_state.get(name, {})
+            chunks = []
+            for lo in range(0, len(sel), self.config.chunk_rows):
+                if cancel.is_set() or (deadline and time.monotonic() > deadline):
+                    raise CheckpointCancelled(f"{name}@{step}")
+                idx = sel[lo: lo + self.config.chunk_rows]
+                t0 = time.monotonic()
+                payload, sections = self._encode_chunk(
+                    tab, idx, aux, qcfg, full=(decision == "full"))
+                build_s += time.monotonic() - t0
+                key = f"{mf.chunk_prefix(step)}{name}/{lo // self.config.chunk_rows:06d}.bin"
+                t0 = time.monotonic()
+                self.store.put(key, payload)
+                write_s += time.monotonic() - t0
+                row_range = ([int(idx[0]), int(idx[-1]) + 1]
+                             if decision == "full" and len(idx) else None)
+                chunks.append(mf.ChunkRecord(
+                    key=key, n_rows=int(len(idx)), nbytes=len(payload),
+                    crc32=ObjectStore.checksum(payload), sections=sections,
+                    row_range=row_range))
+                total_bytes += len(payload)
+            tables[name] = mf.TableRecord(
+                rows=rows, dim=dim, dtype=str(tab.dtype),
+                bits=qcfg.bits if qcfg else None,
+                method=qcfg.method if qcfg else None,
+                row_state={a: str(v.dtype) for a, v in aux.items()},
+                chunks=chunks)
+
+        dense: Dict[str, mf.DenseRecord] = {}
+        for key_name, arr in snap.dense.items():
+            if cancel.is_set():
+                raise CheckpointCancelled(f"dense@{step}")
+            data = np.ascontiguousarray(arr).tobytes()
+            key = f"{mf.chunk_prefix(step)}dense/{_sanitize(key_name)}.bin"
+            t0 = time.monotonic()
+            self.store.put(key, data)
+            write_s += time.monotonic() - t0
+            dense[key_name] = mf.DenseRecord(
+                key=key, shape=list(arr.shape), dtype=str(arr.dtype),
+                nbytes=len(data), crc32=ObjectStore.checksum(data))
+            total_bytes += len(data)
+
+        prev = mf.latest_step(self.store)
+        base = (step if decision == "full" else self.policy.state.baseline_step)
+        man = mf.Manifest(
+            step=step, kind=decision, base_step=base,
+            prev_step=prev, quant=(dataclasses.asdict(qcfg) if qcfg else None),
+            policy=self.policy.to_dict() | {"name": self.policy.name},
+            tables=tables, dense=dense,
+            extra=snap.extra | {"bitwidth": self.bitwidth.to_dict() if self.bitwidth else None},
+            nbytes_total=total_bytes,
+            wall_time_s=time.monotonic() - t_start,
+            created_unix=time.time())
+        mf.commit(self.store, man)
+
+        # post-commit bookkeeping
+        self.policy.observe(step, decision, total_bytes)
+        with self._lock:
+            if decision == "full":
+                self._cum_touched = {k: np.zeros_like(v) for k, v in self._cum_touched.items()}
+            self._uncommitted = {k: np.zeros_like(v) for k, v in self._uncommitted.items()}
+        mf.apply_retention(self.store, self.config.keep_latest, self.config.ttl_days)
+        return SaveResult(step=step, kind=decision, nbytes=total_bytes,
+                          build_time_s=build_s, write_time_s=write_s)
+
+    def _encode_chunk(self, tab: np.ndarray, idx: np.ndarray,
+                      aux: Dict[str, np.ndarray], qcfg: Optional[QuantConfig],
+                      full: bool):
+        """Serialize one chunk of rows: [indices?][scale][zero][codes][aux...]
+        (full-checkpoint chunks are contiguous → range-encoded, no indices)."""
+        rows = tab[idx]
+        parts = []
+        sections: Dict[str, list] = {}
+        off = 0
+
+        def add(nm: str, b: bytes):
+            nonlocal off
+            sections[nm] = [off, len(b)]
+            parts.append(b)
+            off += len(b)
+
+        if not full:
+            add("indices", np.ascontiguousarray(idx, dtype=np.uint32).tobytes())
+        if qcfg is not None and len(idx):
+            q: Quantized = quantize(rows, qcfg)
+            # fp16 quantization metadata (beyond-paper: the paper flags its
+            # metadata structure as unoptimized; fp16 scale/zero costs <1e-3
+            # relative dequant error and halves the per-row overhead)
+            add("scale", np.asarray(q.scale, dtype=np.float16).tobytes())
+            add("zero", np.asarray(q.zero, dtype=np.float16).tobytes())
+            add("codes", packing.pack_bits(np.asarray(q.codes), qcfg.bits))
+        else:
+            add("values", np.ascontiguousarray(rows, dtype=np.float32).tobytes())
+        for a_name, a_arr in aux.items():
+            vals = a_arr[idx]
+            if (self.config.aux_bits == 8 and vals.ndim == 1
+                    and vals.dtype == np.float32 and len(idx)):
+                # per-chunk 8-bit asymmetric: [f32 lo][f32 hi][u8 codes]
+                lo, hi = float(vals.min()), float(vals.max())
+                scale = (hi - lo) / 255.0 or 1.0
+                codes = np.clip(np.round((vals - lo) / scale), 0, 255).astype(np.uint8)
+                add(f"aux8:{a_name}", np.array([lo, hi], np.float32).tobytes()
+                    + codes.tobytes())
+            else:
+                add(f"aux:{a_name}", np.ascontiguousarray(vals).tobytes())
+        return b"".join(parts), sections
+
+    # --------------------------------------------------------------- restore
+    def restore(self, step: Optional[int] = None) -> RestoredState:
+        store = self.store
+        if step is None:
+            step = mf.latest_step(store)
+        if step is None:
+            raise FileNotFoundError("no valid checkpoint found")
+        chain = mf.recovery_chain(store, step)
+
+        tables: Dict[str, np.ndarray] = {}
+        row_state: Dict[str, Dict[str, np.ndarray]] = {}
+        for man in chain:
+            for name, rec in man.tables.items():
+                if name not in tables:
+                    tables[name] = np.zeros((rec.rows, rec.dim), dtype=np.float32)
+                    row_state[name] = {}  # allocated lazily (aux width varies)
+                self._apply_table(tables[name], row_state[name], rec, man)
+        final = chain[-1]
+        dense = {}
+        for key_name, rec in final.dense.items():
+            data = store.get(rec.key)
+            if ObjectStore.checksum(data) != rec.crc32:
+                raise IOError(f"checksum mismatch for {rec.key}")
+            dense[key_name] = np.frombuffer(data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
+        # Resync host bookkeeping + policy so saves after restore are coherent.
+        self.policy.load_dict(final.policy)
+        if self.bitwidth is not None and final.extra.get("bitwidth"):
+            self.bitwidth.load_dict(final.extra["bitwidth"])
+            self.bitwidth.on_restore()
+        with self._lock:
+            self._cum_touched = {}
+            self._uncommitted = {}
+        return RestoredState(step=final.step, tables=tables, row_state=row_state,
+                             dense=dense, extra=final.extra, chain_len=len(chain))
+
+    def _apply_table(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
+                     rec: mf.TableRecord, man: mf.Manifest) -> None:
+        dim = rec.dim
+        for ch in rec.chunks:
+            data = self.store.get(ch.key)
+            if ObjectStore.checksum(data) != ch.crc32:
+                raise IOError(f"checksum mismatch for {ch.key}")
+            if ch.n_rows == 0:
+                continue
+            if "indices" in ch.sections:
+                o, n = ch.sections["indices"]
+                idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
+            else:
+                lo, hi = ch.row_range
+                idx = np.arange(lo, hi, dtype=np.int64)
+            if "values" in ch.sections:
+                o, n = ch.sections["values"]
+                vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
+            else:
+                o, n = ch.sections["scale"]
+                meta_dt = np.float16 if n == 2 * ch.n_rows else np.float32
+                scale = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+                o, n = ch.sections["zero"]
+                zero = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+                o, n = ch.sections["codes"]
+                codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
+                q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
+                vals = np.asarray(dequantize(q))
+            out[idx] = vals
+            for a_name, a_dt in rec.row_state.items():
+                sec8 = ch.sections.get(f"aux8:{a_name}")
+                sec = ch.sections.get(f"aux:{a_name}")
+                if sec8 is not None:
+                    o, n = sec8
+                    lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
+                    codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
+                    a_vals = (codes.astype(np.float32) * ((hi - lo) / 255.0 or 1.0)
+                              + lo)
+                elif sec is None:
+                    continue
+                else:
+                    o, n = sec
+                    a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
+                width = a_vals.size // max(ch.n_rows, 1)
+                if a_name not in aux_out:
+                    shape = (rec.rows,) if width == 1 else (rec.rows, width)
+                    aux_out[a_name] = np.zeros(shape, dtype=np.dtype(a_dt))
+                if width == 1:
+                    aux_out[a_name][idx] = a_vals
+                else:
+                    aux_out[a_name][idx] = a_vals.reshape(-1, width)
+
+
+def _sanitize(key: str) -> str:
+    return key.replace("/", "__").replace(" ", "_").replace("'", "").replace("[", "(").replace("]", ")")

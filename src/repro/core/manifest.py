@@ -1,0 +1,206 @@
+"""Checkpoint manifests: the atomic commit record for a Check-N-Run
+checkpoint (§3.4 step 3 — "when all nodes finish storing their part of the
+checkpoint successfully, Check-N-Run will declare a new valid checkpoint").
+
+A checkpoint is VALID iff its manifest object exists; chunk blobs are written
+first, the manifest last. Manifests carry everything needed for recovery:
+chunk keys + checksums, quantization parameters, the baseline/previous-step
+chain for incremental policies, policy + reader state, and byte accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+from .storage import ObjectStore
+
+MANIFEST_PREFIX = "manifests/"
+
+
+def manifest_key(step: int) -> str:
+    return f"{MANIFEST_PREFIX}ckpt_{step:012d}.json"
+
+
+def chunk_prefix(step: int) -> str:
+    return f"chunks/ckpt_{step:012d}/"
+
+
+@dataclasses.dataclass
+class ChunkRecord:
+    key: str
+    n_rows: int
+    nbytes: int
+    crc32: int
+    sections: Dict[str, List[int]]  # name -> [offset, nbytes]
+    row_range: Optional[List[int]] = None  # [lo, hi) for full-ckpt range chunks
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TableRecord:
+    rows: int
+    dim: int
+    dtype: str
+    bits: Optional[int]
+    method: Optional[str]
+    row_state: Dict[str, str]  # aux name -> dtype (per-row optimizer state)
+    chunks: List[ChunkRecord]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["chunks"] = [c if isinstance(c, dict) else dataclasses.asdict(c) for c in self.chunks]
+        return d
+
+
+@dataclasses.dataclass
+class DenseRecord:
+    key: str
+    shape: List[int]
+    dtype: str
+    nbytes: int
+    crc32: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    kind: str  # "full" | "incremental"
+    base_step: Optional[int]
+    prev_step: Optional[int]
+    quant: Optional[dict]
+    policy: dict
+    tables: Dict[str, TableRecord]
+    dense: Dict[str, DenseRecord]
+    extra: Dict[str, Any]
+    nbytes_total: int
+    wall_time_s: float
+    created_unix: float
+
+    def to_json(self) -> str:
+        d = dict(
+            step=self.step,
+            kind=self.kind,
+            base_step=self.base_step,
+            prev_step=self.prev_step,
+            quant=self.quant,
+            policy=self.policy,
+            tables={k: v.to_dict() for k, v in self.tables.items()},
+            dense={k: v.to_dict() for k, v in self.dense.items()},
+            extra=self.extra,
+            nbytes_total=self.nbytes_total,
+            wall_time_s=self.wall_time_s,
+            created_unix=self.created_unix,
+        )
+        return json.dumps(d, indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Manifest":
+        d = json.loads(s)
+        tables = {}
+        for name, t in d["tables"].items():
+            chunks = [ChunkRecord(**c) for c in t.pop("chunks")]
+            tables[name] = TableRecord(chunks=chunks, **t)
+        dense = {k: DenseRecord(**v) for k, v in d["dense"].items()}
+        return cls(
+            step=d["step"],
+            kind=d["kind"],
+            base_step=d.get("base_step"),
+            prev_step=d.get("prev_step"),
+            quant=d.get("quant"),
+            policy=d["policy"],
+            tables=tables,
+            dense=dense,
+            extra=d.get("extra", {}),
+            nbytes_total=d["nbytes_total"],
+            wall_time_s=d.get("wall_time_s", 0.0),
+            created_unix=d.get("created_unix", 0.0),
+        )
+
+
+def commit(store: ObjectStore, manifest: Manifest) -> None:
+    store.put(manifest_key(manifest.step), manifest.to_json().encode())
+
+
+def load(store: ObjectStore, step: int) -> Manifest:
+    return Manifest.from_json(store.get(manifest_key(step)).decode())
+
+
+def list_steps(store: ObjectStore) -> List[int]:
+    steps = []
+    for key in store.list(MANIFEST_PREFIX):
+        name = key[len(MANIFEST_PREFIX):]
+        if name.startswith("ckpt_") and name.endswith(".json"):
+            steps.append(int(name[len("ckpt_"): -len(".json")]))
+    return sorted(steps)
+
+
+def latest_step(store: ObjectStore) -> Optional[int]:
+    steps = list_steps(store)
+    return steps[-1] if steps else None
+
+
+def recovery_chain(store: ObjectStore, step: int) -> List[Manifest]:
+    """Manifests to replay (oldest→newest) to reconstruct state at ``step``.
+
+    * full checkpoint: [m]
+    * one-shot / intermittent increment (cumulative): [base, m]
+    * consecutive increment: [base, inc_1, ..., m] following prev_step links.
+    """
+    m = load(store, step)
+    if m.kind == "full":
+        return [m]
+    chain = [m]
+    cursor = m
+    while cursor.kind != "full":
+        prev = cursor.prev_step if cursor.policy.get("name") == "consecutive" else cursor.base_step
+        if prev is None:
+            raise ValueError(f"broken recovery chain at step {cursor.step}")
+        cursor = load(store, prev)
+        chain.append(cursor)
+    chain.reverse()
+    if chain[0].kind != "full":
+        raise ValueError("recovery chain does not start at a full checkpoint")
+    return chain
+
+
+def reachable_steps(store: ObjectStore, keep_steps: List[int]) -> set:
+    """All steps needed to restore any of ``keep_steps`` (chain closure)."""
+    needed = set()
+    for s in keep_steps:
+        for m in recovery_chain(store, s):
+            needed.add(m.step)
+    return needed
+
+
+def apply_retention(store: ObjectStore, keep_latest: int = 1,
+                    ttl_days: float = 14.0, now: Optional[float] = None) -> List[int]:
+    """Delete checkpoints beyond the newest ``keep_latest`` (and their chain
+    dependencies) or older than ``ttl_days`` (paper §3.4: default keeps only
+    the latest valid checkpoint, stored <= 14 days). Returns deleted steps."""
+    now = time.time() if now is None else now
+    steps = list_steps(store)
+    if not steps:
+        return []
+    keep = steps[-keep_latest:] if keep_latest > 0 else []
+    needed = reachable_steps(store, keep)
+    deleted = []
+    for s in steps:
+        m = load(store, s)
+        expired = (now - m.created_unix) > ttl_days * 86400.0
+        if s in needed and not expired:
+            continue
+        if s in needed and expired and s in keep:
+            continue  # never delete the newest valid checkpoint
+        for key in store.list(chunk_prefix(s)):
+            store.delete(key)
+        store.delete(manifest_key(s))
+        deleted.append(s)
+    return deleted

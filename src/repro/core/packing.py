@@ -1,0 +1,48 @@
+"""Host-side bit packing for quantized checkpoint payloads.
+
+Codes are stored unpacked (uint8) on device; serialization packs them into a
+dense little-endian bit stream so the on-disk/bandwidth accounting matches the
+true entropy of an N-bit code (incl. the awkward 3-bit case: 8 codes / 3
+bytes). Pure numpy — this runs in the background checkpoint writer, not in the
+jitted training path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_bits(codes: np.ndarray, bits: int) -> bytes:
+    """Pack uint8 codes (< 2**bits) into a little-endian bit stream."""
+    if not 1 <= bits <= 8:
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
+    codes = np.ascontiguousarray(codes, dtype=np.uint8).reshape(-1)
+    if codes.size and int(codes.max()) >= (1 << bits):
+        raise ValueError(f"code out of range for {bits}-bit packing")
+    if bits == 8:
+        return codes.tobytes()
+    # Expand each code into its `bits` little-endian bits, then re-pack bytes.
+    bit_cols = np.arange(bits, dtype=np.uint8)
+    bit_matrix = (codes[:, None] >> bit_cols[None, :]) & 1  # (n, bits)
+    stream = bit_matrix.reshape(-1)
+    pad = (-stream.size) % 8
+    if pad:
+        stream = np.concatenate([stream, np.zeros(pad, dtype=np.uint8)])
+    return np.packbits(stream.reshape(-1, 8), axis=-1, bitorder="little").tobytes()
+
+
+def unpack_bits(buf: bytes, bits: int, count: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; returns uint8 array of ``count`` codes."""
+    if bits == 8:
+        out = np.frombuffer(buf, dtype=np.uint8, count=count)
+        return out.copy()
+    raw = np.frombuffer(buf, dtype=np.uint8)
+    stream = np.unpackbits(raw, bitorder="little")
+    stream = stream[: count * bits].reshape(count, bits)
+    weights = (1 << np.arange(bits, dtype=np.uint8)).astype(np.uint8)
+    return (stream * weights[None, :]).sum(axis=-1).astype(np.uint8)
+
+
+def packed_nbytes(count: int, bits: int) -> int:
+    """Exact packed payload size in bytes for ``count`` N-bit codes."""
+    return (count * bits + 7) // 8

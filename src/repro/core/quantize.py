@@ -1,0 +1,336 @@
+"""Checkpoint quantization (Check-N-Run §4.2).
+
+All quantizers operate row-wise on a 2-D array ``x`` of shape ``(rows, dim)``:
+each embedding vector is quantized independently, matching the paper's
+"granularity of an entire embedding vector".
+
+Quantizer families (paper §4.2.1–§4.2.3):
+
+* uniform symmetric / asymmetric         — ``uniform_quantize``
+* adaptive asymmetric (greedy range search) — ``adaptive_quantize``
+* k-means per vector                      — ``kmeans_quantize``
+* k-means over contiguous blocks          — ``kmeans_block_quantize``
+* 2-tier k-means over clustered blocks    — ``kmeans_clustered_quantize``
+
+Every function is pure jnp and jit-friendly (bit-width et al. are static).
+These double as the ``ref`` oracle for the Pallas kernel in
+``repro.kernels.adaptive_quant``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration for checkpoint quantization.
+
+    Paper defaults (§4.2.3): adaptive asymmetric for <=4 bits with
+    bins=25/ratio=0.5 (2b), bins=25/ratio=0.2 (3b), bins=45/ratio=0.2 (4b);
+    naive asymmetric for 8 bits.
+    """
+
+    bits: int = 4
+    method: str = "adaptive"  # uniform_sym | uniform_asym | adaptive | kmeans
+    num_bins: Optional[int] = None
+    ratio: Optional[float] = None
+
+    def resolve(self) -> "QuantConfig":
+        if self.method != "adaptive":
+            return self
+        bins = self.num_bins
+        ratio = self.ratio
+        if bins is None:
+            bins = 45 if self.bits >= 4 else 25
+        if ratio is None:
+            ratio = 0.5 if self.bits <= 2 else 0.2
+        return dataclasses.replace(self, num_bins=bins, ratio=ratio)
+
+
+PAPER_DEFAULTS = {
+    2: QuantConfig(bits=2, method="adaptive", num_bins=25, ratio=0.5),
+    3: QuantConfig(bits=3, method="adaptive", num_bins=25, ratio=0.2),
+    4: QuantConfig(bits=4, method="adaptive", num_bins=45, ratio=0.2),
+    8: QuantConfig(bits=8, method="uniform_asym"),
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """Row-quantized tensor: integer codes + per-row affine params.
+
+    ``codes``  uint8 (rows, dim)   — unpacked integer codes in [0, 2^bits-1]
+    ``scale``  f32   (rows,)
+    ``zero``   f32   (rows,)       — zero_point (= chosen x_min)
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(*children, bits=bits)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KmeansQuantized:
+    """codes uint8 (rows, dim); codebook f32 (rows_or_blocks, 2^bits)."""
+
+    codes: jax.Array
+    codebook: jax.Array
+    block_ids: Optional[jax.Array] = None  # (rows,) for block variants
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+
+    def tree_flatten(self):
+        return (self.codes, self.codebook, self.block_ids), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(*children, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Uniform quantization (§4.2.1)
+# ---------------------------------------------------------------------------
+
+
+def _affine_quantize(x, x_min, x_max, bits):
+    """Map x (rows, dim) to integer codes given per-row [x_min, x_max]."""
+    levels = (1 << bits) - 1
+    rng = x_max - x_min
+    scale = jnp.where(rng > 0, rng / levels, 1.0)
+    zero = x_min
+    q = jnp.round((jnp.clip(x, x_min[:, None], x_max[:, None]) - zero[:, None]) / scale[:, None])
+    q = jnp.clip(q, 0, levels)
+    return q.astype(jnp.uint8), scale.astype(jnp.float32), zero.astype(jnp.float32)
+
+
+def _affine_error(x, x_min, x_max, bits):
+    """Per-row squared-l2 reconstruction error for a candidate range."""
+    levels = (1 << bits) - 1
+    rng = x_max - x_min
+    scale = jnp.where(rng > 0, rng / levels, 1.0)
+    xc = jnp.clip(x, x_min[:, None], x_max[:, None])
+    q = jnp.round((xc - x_min[:, None]) / scale[:, None])
+    q = jnp.clip(q, 0, levels)
+    deq = q * scale[:, None] + x_min[:, None]
+    return jnp.sum(jnp.square(x - deq), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "symmetric"))
+def uniform_quantize(x: jax.Array, bits: int, symmetric: bool = False) -> Quantized:
+    x = x.astype(jnp.float32)
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        x_min, x_max = -amax, amax
+    else:
+        x_min = jnp.min(x, axis=-1)
+        x_max = jnp.max(x, axis=-1)
+    codes, scale, zero = _affine_quantize(x, x_min, x_max, bits)
+    return Quantized(codes, scale, zero, bits=bits)
+
+
+@jax.jit
+def dequantize(q: Quantized) -> jax.Array:
+    return q.codes.astype(jnp.float32) * q.scale[:, None] + q.zero[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive asymmetric quantization (§4.2.3)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "num_bins", "ratio"))
+def adaptive_quantize(
+    x: jax.Array,
+    bits: int,
+    num_bins: int = 25,
+    ratio: float = 0.5,
+) -> Quantized:
+    """Greedy per-row range search (paper §4.2.3).
+
+    step = (max-min)/num_bins. Each iteration evaluates shrinking either the
+    lower or the upper bound by one step, keeps the better, and remembers the
+    best (min,max) seen. Iterates until ``ratio`` of the original range has
+    been covered, i.e. ``floor(ratio * num_bins)`` steps.
+    """
+    x = x.astype(jnp.float32)
+    x_min0 = jnp.min(x, axis=-1)
+    x_max0 = jnp.max(x, axis=-1)
+    step = (x_max0 - x_min0) / num_bins
+
+    n_steps = int(ratio * num_bins)
+
+    err0 = _affine_error(x, x_min0, x_max0, bits)
+
+    def body(_, carry):
+        cur_min, cur_max, best_min, best_max, best_err = carry
+        err_lo = _affine_error(x, cur_min + step, cur_max, bits)
+        err_hi = _affine_error(x, cur_min, cur_max - step, bits)
+        take_lo = err_lo <= err_hi
+        new_min = jnp.where(take_lo, cur_min + step, cur_min)
+        new_max = jnp.where(take_lo, cur_max, cur_max - step)
+        cur_err = jnp.where(take_lo, err_lo, err_hi)
+        improve = cur_err < best_err
+        best_min = jnp.where(improve, new_min, best_min)
+        best_max = jnp.where(improve, new_max, best_max)
+        best_err = jnp.where(improve, cur_err, best_err)
+        return new_min, new_max, best_min, best_max, best_err
+
+    init = (x_min0, x_max0, x_min0, x_max0, err0)
+    _, _, best_min, best_max, _ = jax.lax.fori_loop(0, n_steps, body, init)
+    codes, scale, zero = _affine_quantize(x, best_min, best_max, bits)
+    return Quantized(codes, scale, zero, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# K-means quantization (§4.2.2)
+# ---------------------------------------------------------------------------
+
+
+def _kmeans_1d(values: jax.Array, k: int, iters: int) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's algorithm on a flat value set. Returns (codes, centroids).
+
+    Deterministic quantile init (avoids the paper's noted 4-bit cluster-init
+    randomness regression).
+    """
+    n = values.shape[0]
+    qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+    cent = jnp.quantile(values, qs)
+
+    def body(_, cent):
+        d = jnp.abs(values[:, None] - cent[None, :])
+        assign = jnp.argmin(d, axis=-1)
+        sums = jax.ops.segment_sum(values, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones_like(values), assign, num_segments=k)
+        return jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1.0), cent)
+
+    cent = jax.lax.fori_loop(0, iters, body, cent)
+    codes = jnp.argmin(jnp.abs(values[:, None] - cent[None, :]), axis=-1)
+    return codes.astype(jnp.uint8), cent.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "iters"))
+def kmeans_quantize(x: jax.Array, bits: int, iters: int = 15) -> KmeansQuantized:
+    """Per-vector k-means (one codebook per embedding row)."""
+    x = x.astype(jnp.float32)
+    k = 1 << bits
+    codes, books = jax.vmap(lambda row: _kmeans_1d(row, k, iters))(x)
+    return KmeansQuantized(codes, books, bits=bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_blocks", "iters"))
+def kmeans_block_quantize(
+    x: jax.Array, bits: int, n_blocks: int, iters: int = 15
+) -> KmeansQuantized:
+    """K-means over ``n_blocks`` contiguous row blocks (shared codebook/block)."""
+    x = x.astype(jnp.float32)
+    rows, dim = x.shape
+    assert rows % n_blocks == 0, "rows must divide n_blocks for the benchmark"
+    k = 1 << bits
+    xb = x.reshape(n_blocks, (rows // n_blocks) * dim)
+    codes, books = jax.vmap(lambda blk: _kmeans_1d(blk, k, iters))(xb)
+    codes = codes.reshape(rows, dim)
+    block_ids = jnp.repeat(jnp.arange(n_blocks, dtype=jnp.int32), rows // n_blocks)
+    return KmeansQuantized(codes, books, block_ids, bits=bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_blocks", "iters", "cluster_iters"))
+def kmeans_clustered_quantize(
+    x: jax.Array,
+    bits: int,
+    n_blocks: int,
+    iters: int = 15,
+    cluster_iters: int = 5,
+) -> KmeansQuantized:
+    """2-tier k-means (§4.2.2): cluster rows into blocks of *similar* vectors
+    first, then run element k-means per block."""
+    x = x.astype(jnp.float32)
+    rows, dim = x.shape
+    k = 1 << bits
+
+    # Tier 1: cluster the rows themselves (vector k-means, quantile-seeded on
+    # the row norm ordering for determinism).
+    norms = jnp.linalg.norm(x, axis=-1)
+    order = jnp.argsort(norms)
+    seed_idx = order[jnp.linspace(0, rows - 1, n_blocks).astype(jnp.int32)]
+    cent = x[seed_idx]
+
+    def t1_body(_, cent):
+        d = jnp.sum(jnp.square(x[:, None, :] - cent[None, :, :]), axis=-1)
+        assign = jnp.argmin(d, axis=-1)
+        sums = jax.ops.segment_sum(x, assign, num_segments=n_blocks)
+        cnts = jax.ops.segment_sum(jnp.ones((rows,)), assign, num_segments=n_blocks)
+        return jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1.0)[:, None], cent)
+
+    cent = jax.lax.fori_loop(0, cluster_iters, t1_body, cent)
+    d = jnp.sum(jnp.square(x[:, None, :] - cent[None, :, :]), axis=-1)
+    block_ids = jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+    # Tier 2: per-block element k-means. Blocks are ragged; we run a masked
+    # Lloyd update per block over the full element set.
+    flat = x.reshape(-1)
+    elem_block = jnp.repeat(block_ids, dim)
+
+    qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+    global_q = jnp.quantile(flat, qs)
+    books = jnp.tile(global_q[None, :], (n_blocks, 1))
+
+    def t2_body(_, books):
+        c = books[elem_block]  # (n_elem, k)
+        assign = jnp.argmin(jnp.abs(flat[:, None] - c), axis=-1)
+        seg = elem_block * k + assign
+        sums = jax.ops.segment_sum(flat, seg, num_segments=n_blocks * k)
+        cnts = jax.ops.segment_sum(jnp.ones_like(flat), seg, num_segments=n_blocks * k)
+        upd = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1.0), books.reshape(-1))
+        return upd.reshape(n_blocks, k)
+
+    books = jax.lax.fori_loop(0, iters, t2_body, books)
+    c = books[elem_block]
+    codes = jnp.argmin(jnp.abs(flat[:, None] - c), axis=-1).astype(jnp.uint8)
+    return KmeansQuantized(codes.reshape(rows, dim), books, block_ids, bits=bits)
+
+
+@jax.jit
+def kmeans_dequantize(q: KmeansQuantized) -> jax.Array:
+    if q.block_ids is None:
+        return jnp.take_along_axis(q.codebook, q.codes.astype(jnp.int32), axis=-1)
+    books = q.codebook[q.block_ids]  # (rows, k)
+    return jnp.take_along_axis(books, q.codes.astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + metrics
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, cfg: QuantConfig) -> Quantized:
+    cfg = cfg.resolve()
+    if cfg.method == "uniform_sym":
+        return uniform_quantize(x, cfg.bits, symmetric=True)
+    if cfg.method == "uniform_asym":
+        return uniform_quantize(x, cfg.bits, symmetric=False)
+    if cfg.method == "adaptive":
+        return adaptive_quantize(x, cfg.bits, cfg.num_bins, cfg.ratio)
+    raise ValueError(f"unknown quantization method {cfg.method!r}")
+
+
+@jax.jit
+def mean_l2_loss(x: jax.Array, deq: jax.Array) -> jax.Array:
+    """Paper metric: (1/m) * sum_i ||X_i - Q_i||_2  (mean of row l2 norms)."""
+    return jnp.mean(jnp.linalg.norm(x.astype(jnp.float32) - deq, axis=-1))

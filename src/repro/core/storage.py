@@ -1,0 +1,222 @@
+"""Remote object-store abstraction (Check-N-Run §3, "written to remote
+object storage").
+
+Backends:
+  * ``LocalFSStore``   — durable, atomic (temp + rename) local filesystem.
+  * ``InMemoryStore``  — for tests/benchmarks.
+  * ``ThrottledStore`` — wraps any store with a bytes/sec write-bandwidth cap
+                          to emulate the remote-storage bottleneck the paper
+                          optimizes for.
+
+Every store keeps exact write/read byte counters so the Fig. 8/9/11
+benchmarks report measured bandwidth/capacity, not estimates.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+import zlib
+from typing import Dict, Iterable, Optional
+
+
+class StoreCounters:
+    def __init__(self) -> None:
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.put_ops = 0
+        self.get_ops = 0
+        self.delete_ops = 0
+        self._lock = threading.Lock()
+
+    def on_put(self, n: int) -> None:
+        with self._lock:
+            self.bytes_written += n
+            self.put_ops += 1
+
+    def on_get(self, n: int) -> None:
+        with self._lock:
+            self.bytes_read += n
+            self.get_ops += 1
+
+    def on_delete(self) -> None:
+        with self._lock:
+            self.delete_ops += 1
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(
+                bytes_written=self.bytes_written,
+                bytes_read=self.bytes_read,
+                put_ops=self.put_ops,
+                get_ops=self.get_ops,
+                delete_ops=self.delete_ops,
+            )
+
+
+class ObjectStore:
+    """put/get/delete/list of immutable blobs under string keys."""
+
+    def __init__(self) -> None:
+        self.counters = StoreCounters()
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> Iterable[str]:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def size(self, key: str) -> int:
+        raise NotImplementedError
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(self.size(k) for k in self.list(prefix))
+
+    @staticmethod
+    def checksum(data: bytes) -> int:
+        return zlib.crc32(data) & 0xFFFFFFFF
+
+
+class InMemoryStore(ObjectStore):
+    def __init__(self) -> None:
+        super().__init__()
+        self._blobs: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._blobs[key] = bytes(data)
+        self.counters.on_put(len(data))
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            data = self._blobs[key]
+        self.counters.on_get(len(data))
+        return data
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._blobs.pop(key, None)
+        self.counters.on_delete()
+
+    def list(self, prefix: str = "") -> Iterable[str]:
+        with self._lock:
+            return sorted(k for k in self._blobs if k.startswith(prefix))
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._blobs
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            return len(self._blobs[key])
+
+
+class LocalFSStore(ObjectStore):
+    """Atomic local-FS store: writes go to ``<path>.tmp.<pid>`` then rename."""
+
+    def __init__(self, root: str) -> None:
+        super().__init__()
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        path = os.path.normpath(os.path.join(self.root, key))
+        if not path.startswith(os.path.normpath(self.root)):
+            raise ValueError(f"key escapes store root: {key!r}")
+        return path
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self.counters.on_put(len(data))
+
+    def get(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        self.counters.on_get(len(data))
+        return data
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+        self.counters.on_delete()
+
+    def list(self, prefix: str = "") -> Iterable[str]:
+        out = []
+        for dirpath, _, files in os.walk(self.root):
+            for fn in files:
+                if fn.endswith(".tmp") or ".tmp." in fn:
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    out.append(rel)
+        return sorted(out)
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def size(self, key: str) -> int:
+        return os.path.getsize(self._path(key))
+
+
+class ThrottledStore(ObjectStore):
+    """Caps write bandwidth (bytes/sec) to emulate remote-storage limits."""
+
+    def __init__(self, inner: ObjectStore, write_bytes_per_sec: float,
+                 cancel_event: Optional[threading.Event] = None) -> None:
+        super().__init__()
+        self.inner = inner
+        self.bw = float(write_bytes_per_sec)
+        self.cancel_event = cancel_event or threading.Event()
+        self.counters = inner.counters
+
+    def put(self, key: str, data: bytes) -> None:
+        # Sleep in slices so a cancel (straggler mitigation, §3.3) interrupts.
+        delay = len(data) / self.bw
+        deadline = time.monotonic() + delay
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            if self.cancel_event.wait(timeout=min(remaining, 0.05)):
+                raise CheckpointCancelled(key)
+        self.inner.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        return self.inner.get(key)
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def list(self, prefix: str = "") -> Iterable[str]:
+        return self.inner.list(prefix)
+
+    def exists(self, key: str) -> bool:
+        return self.inner.exists(key)
+
+    def size(self, key: str) -> int:
+        return self.inner.size(key)
+
+
+class CheckpointCancelled(RuntimeError):
+    """Raised inside a writer when the in-flight checkpoint is cancelled."""

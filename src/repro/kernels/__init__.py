@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper with backend dispatch), ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; `impl="pallas"` targets real TPUs.
+"""
+
+from .adaptive_quant import adaptive_quant
+from .dot_interaction import dot_interaction
+from .embedding_bag import embedding_bag
+from .flash_attention import flash_attention
+
+__all__ = ["adaptive_quant", "dot_interaction", "embedding_bag",
+           "flash_attention"]

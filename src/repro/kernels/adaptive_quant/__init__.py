@@ -1,0 +1,4 @@
+from .ops import adaptive_quant
+from .ref import adaptive_quant_ref
+
+__all__ = ["adaptive_quant", "adaptive_quant_ref"]

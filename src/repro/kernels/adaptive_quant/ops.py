@@ -1,0 +1,46 @@
+"""Jitted public wrapper for adaptive-quant: Pallas on TPU, interpret-mode
+Pallas for validation, jnp reference elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantize import Quantized
+from .kernel import adaptive_quant_pallas
+from .ref import adaptive_quant_ref
+
+
+def _backend_is_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "num_bins", "ratio",
+                                             "block_rows", "impl"))
+def adaptive_quant(x: jax.Array, bits: int = 4, num_bins: int = 45,
+                   ratio: float = 0.2, block_rows: int = 256,
+                   impl: str = "auto") -> Quantized:
+    """Row-wise adaptive asymmetric quantization (paper §4.2.3).
+
+    impl: "auto" (pallas on TPU, ref otherwise), "pallas", "interpret", "ref".
+    """
+    rows, dim = x.shape
+    if impl == "auto":
+        impl = "pallas" if _backend_is_tpu() else "ref"
+    if impl == "ref":
+        codes, scale, zero = adaptive_quant_ref(x, bits=bits, num_bins=num_bins,
+                                                ratio=ratio)
+        return Quantized(codes, scale, zero, bits=bits)
+    interpret = impl == "interpret"
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    codes, scale, zero = adaptive_quant_pallas(
+        x.astype(jnp.float32), bits=bits, num_bins=num_bins, ratio=ratio,
+        block_rows=br, interpret=interpret)
+    return Quantized(codes, scale, zero, bits=bits)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the adaptive-quant kernel — delegates to the core
+library implementation (repro.core.quantize.adaptive_quantize), which is the
+paper-faithful reference."""
+
+from __future__ import annotations
+
+import jax
+
+from ...core.quantize import adaptive_quantize
+
+
+def adaptive_quant_ref(x: jax.Array, *, bits: int, num_bins: int, ratio: float):
+    q = adaptive_quantize(x, bits, num_bins, ratio)
+    return q.codes, q.scale, q.zero

@@ -1,0 +1,4 @@
+from .ops import dot_interaction
+from .ref import dot_interaction_ref
+
+__all__ = ["dot_interaction", "dot_interaction_ref"]

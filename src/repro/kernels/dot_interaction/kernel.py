@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: DLRM dot-product feature interaction.
+
+feats (B, F, D) → lower-triangle of feats·featsᵀ, (B, F(F-1)/2).
+
+TPU mapping: batch tiles of BLOCK_B rows; per tile the (F, D)×(D, F) gram
+matrix runs on the MXU; the triangle extraction is expressed as a second
+matmul with a constant 0/1 selection matrix (F², P) — gathers are weak on
+TPU, one-hot matmuls are free by comparison. F and D are zero-padded to the
+128-lane boundary by the wrapper; padded rows contribute zero dots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def dot_interaction_kernel(x_ref, sel_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)          # (BLOCK_B, F_pad, D_pad)
+    z = jnp.einsum("bfd,bgd->bfg", x, x)        # MXU gram matrix
+    bb, fp, _ = z.shape
+    zf = z.reshape(bb, fp * fp)
+    out_ref[...] = zf @ sel_ref[...].astype(jnp.float32)  # triangle-select matmul
+
+
+def dot_interaction_pallas(feats: jax.Array, *, block_b: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    B, F, D = feats.shape
+    n_pairs = F * (F - 1) // 2
+    f_pad = ((F + 7) // 8) * 8
+    d_pad = ((D + 127) // 128) * 128
+    p_pad = ((n_pairs + 127) // 128) * 128
+    assert B % block_b == 0, (B, block_b)
+
+    x = jnp.pad(feats, ((0, 0), (0, f_pad - F), (0, d_pad - D)))
+    iu, ju = np.triu_indices(F, k=1)
+    sel = np.zeros((f_pad * f_pad, p_pad), np.float32)
+    sel[iu * f_pad + ju, np.arange(n_pairs)] = 1.0
+    sel = jnp.asarray(sel)
+
+    out = pl.pallas_call(
+        dot_interaction_kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, f_pad, d_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f_pad * f_pad, p_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, p_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, p_pad), jnp.float32),
+        interpret=interpret,
+    )(x, sel)
+    return out[:, :n_pairs]

@@ -1,0 +1,23 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import dot_interaction_pallas
+from .ref import dot_interaction_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "impl"))
+def dot_interaction(feats: jax.Array, block_b: int = 256, impl: str = "auto"):
+    """(B, F, D) → (B, F(F-1)/2) pairwise dots."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return dot_interaction_ref(feats)
+    B = feats.shape[0]
+    bb = min(block_b, B)
+    while B % bb:
+        bb -= 1
+    return dot_interaction_pallas(feats, block_b=bb,
+                                  interpret=(impl == "interpret"))

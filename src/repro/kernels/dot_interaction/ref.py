@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: DLRM pairwise-dot interaction (models/dlrm.py logic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dot_interaction_ref(feats: jax.Array) -> jax.Array:
+    z = jnp.einsum("bfd,bgd->bfg", feats.astype(jnp.float32),
+                   feats.astype(jnp.float32))
+    f = feats.shape[1]
+    iu, ju = np.triu_indices(f, k=1)
+    return z[:, iu, ju]

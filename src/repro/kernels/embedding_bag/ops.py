@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def embedding_bag(table: jax.Array, ids: jax.Array, impl: str = "auto"):
+    """EmbeddingBag-sum: (V, D) table × (B, H) ids → (B, D)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return embedding_bag_ref(table, ids)
+    return embedding_bag_pallas(table, ids, interpret=(impl == "interpret"))

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: EmbeddingBag sum (models/embedding.py logic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0).sum(axis=-2)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused online-softmax (flash) attention forward.
+
+Used on TPU for the prefill path; the XLA chunked-scan implementation
+(models/layers.chunked_attention) is the oracle and the CPU/dry-run path.
+
+TPU mapping: grid (B·Hkv·G, nq, nk) with the kv axis innermost ("arbitrary"
+semantics) so the (m, l, acc) online-softmax state lives in VMEM scratch and
+the output block is written once per q tile on the last kv step. Tiles:
+q (BLOCK_Q, D), k/v (BLOCK_K, D) — D padded to 128 lanes; MXU does the
+(BLOCK_Q × D) × (D × BLOCK_K) score tile and the (BLOCK_Q × BLOCK_K) ×
+(BLOCK_K × D) accumulate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, block_q: int, block_k: int,
+                 n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (block_q, D)
+    k = k_ref[0].astype(jnp.float32)            # (block_k, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, Sq, Hq, D); k, v (B, Sk, Hkv, D) → (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    d_pad = ((D + 127) // 128) * 128
+    if d_pad != D:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, d_pad - D)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, d_pad - D)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, d_pad - D)))
+
+    # flatten (B, Hkv, G) into one parallel grid axis; k/v broadcast over G
+    qf = q.reshape(B, Sq, Hkv, G, d_pad).transpose(0, 2, 3, 1, 4) \
+          .reshape(B * Hkv * G, Sq, d_pad)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d_pad), G, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d_pad), G, axis=0)
+
+    n_q, n_k = Sq // block_q, Sk // block_k
+    kernel = functools.partial(flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv * G, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_pad), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_pad), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv * G, Sq, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hkv, G, Sq, d_pad).transpose(0, 3, 1, 2, 4) \
+             .reshape(B, Sq, Hq, d_pad)
+    return out[..., :D]

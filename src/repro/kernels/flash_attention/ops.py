@@ -1,0 +1,20 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, impl: str = "auto",
+                    block_q: int = 512, block_k: int = 512):
+    """Fused attention: (B,Sq,Hq,D) × (B,Sk,Hkv,D)² → (B,Sq,Hq,D)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=(impl == "interpret"))

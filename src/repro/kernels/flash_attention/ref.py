@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: chunked online-softmax attention (models/layers.py)."""
+
+from __future__ import annotations
+
+import jax
+
+from ...models.layers import chunked_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    return chunked_attention(q, k, v, causal=causal)

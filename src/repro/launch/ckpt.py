@@ -1,0 +1,92 @@
+"""Checkpoint inspection / verification CLI (operational tooling).
+
+  PYTHONPATH=src python -m repro.launch.ckpt list   --dir /ckpts/job-1
+  PYTHONPATH=src python -m repro.launch.ckpt show   --dir /ckpts/job-1 --step 12000
+  PYTHONPATH=src python -m repro.launch.ckpt verify --dir /ckpts/job-1   # fsck
+  PYTHONPATH=src python -m repro.launch.ckpt gc     --dir /ckpts/job-1 --keep 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cmd", choices=["list", "show", "verify", "gc"])
+    ap.add_argument("--dir", required=True)
+    ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--keep", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from ..core import LocalFSStore, ObjectStore
+    from ..core import manifest as mf
+
+    store = LocalFSStore(args.dir)
+    steps = mf.list_steps(store)
+    if not steps:
+        print("no valid checkpoints")
+        return 1
+
+    if args.cmd == "list":
+        print(f"{'step':>10} {'kind':<12} {'MB':>9} {'tables':>7} {'age':>10}")
+        for s in steps:
+            m = mf.load(store, s)
+            age = time.time() - m.created_unix
+            print(f"{s:>10} {m.kind:<12} {m.nbytes_total/1e6:9.2f} "
+                  f"{len(m.tables):>7} {age/3600:9.1f}h")
+        return 0
+
+    if args.cmd == "show":
+        s = args.step or steps[-1]
+        m = mf.load(store, s)
+        print(f"step {m.step} ({m.kind}); base={m.base_step} prev={m.prev_step}")
+        print(f"policy: {m.policy.get('name')}  quant: {m.quant}")
+        print(f"total bytes: {m.nbytes_total:,}  wall: {m.wall_time_s:.2f}s")
+        chain = mf.recovery_chain(store, s)
+        print(f"recovery chain: {[c.step for c in chain]}")
+        for name, rec in m.tables.items():
+            rows_stored = sum(c.n_rows for c in rec.chunks)
+            print(f"  table {name}: {rec.rows}×{rec.dim} "
+                  f"({rows_stored} rows stored in {len(rec.chunks)} chunks, "
+                  f"{100*rows_stored/max(rec.rows,1):.1f}%)")
+        return 0
+
+    if args.cmd == "verify":
+        bad = 0
+        for s in steps:
+            m = mf.load(store, s)
+            for name, rec in m.tables.items():
+                for ch in rec.chunks:
+                    try:
+                        data = store.get(ch.key)
+                    except FileNotFoundError:
+                        print(f"MISSING {ch.key}")
+                        bad += 1
+                        continue
+                    if ObjectStore.checksum(data) != ch.crc32:
+                        print(f"CORRUPT {ch.key}")
+                        bad += 1
+            for key_name, rec in m.dense.items():
+                try:
+                    data = store.get(rec.key)
+                except FileNotFoundError:
+                    print(f"MISSING {rec.key}")
+                    bad += 1
+                    continue
+                if ObjectStore.checksum(data) != rec.crc32:
+                    print(f"CORRUPT {rec.key}")
+                    bad += 1
+            print(f"step {s}: {'OK' if bad == 0 else f'{bad} problems'}")
+        return 1 if bad else 0
+
+    if args.cmd == "gc":
+        deleted = mf.apply_retention(store, keep_latest=args.keep)
+        print(f"deleted checkpoints: {deleted or 'none'}")
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

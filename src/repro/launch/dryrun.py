@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**ShapeDtypeStructs).compile()
+must succeed on the production meshes; we record memory_analysis(),
+cost_analysis() and the per-type collective byte volume parsed from the
+compiled HLO — the inputs to the roofline report (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-rm2 --shape train_batch
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/]
+
+NOTE: the XLA_FLAGS line above MUST run before any other jax-importing
+import — jax locks the device count at first init.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RESULT_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+(" +
+    "|".join(COLLECTIVE_OPS) + r")(-start)?\(")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,S]<=[N] → G groups of size S
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int = 1) -> dict:
+    """Per-device collective traffic from the post-SPMD HLO.
+
+    The compiled HLO does not inline operand shapes, so we parse each
+    collective's RESULT shape + replica_groups and convert to (a) operand
+    bytes and (b) an estimated per-device wire-byte volume assuming ring
+    algorithms:
+        all-gather      operand = result/gs      wire = result·(gs-1)/gs
+        all-reduce      operand = result         wire = 2·result·(gs-1)/gs
+        reduce-scatter  operand = result·gs      wire = result·(gs-1)
+        all-to-all      operand = result         wire = result·(gs-1)/gs
+        collective-permute operand = result      wire = result
+    """
+    out = {op: 0.0 for op in COLLECTIVE_OPS}
+    wire = {op: 0.0 for op in COLLECTIVE_OPS}
+    count = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _RESULT_RE.search(s)
+        if not m:
+            continue
+        shape_s, op = m.group(1), m.group(2)
+        rbytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(shape_s))
+        gs = _group_size(s, n_devices)
+        if op == "all-gather":
+            operand, w = rbytes / gs, rbytes * (gs - 1) / gs
+        elif op == "all-reduce":
+            operand, w = rbytes, 2.0 * rbytes * (gs - 1) / gs
+        elif op == "reduce-scatter":
+            operand, w = rbytes * gs, rbytes * (gs - 1)
+        elif op == "all-to-all":
+            operand, w = rbytes, rbytes * (gs - 1) / gs
+        else:  # collective-permute
+            operand, w = rbytes, rbytes
+        out[op] += operand
+        wire[op] += w
+        count[op] += 1
+    out["total"] = sum(out[o] for o in COLLECTIVE_OPS)
+    out["wire_total"] = sum(wire[o] for o in COLLECTIVE_OPS)
+    out["wire"] = wire
+    out["counts"] = count
+    return out
+
+
+def _shardings(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p if p is not None else P()),
+        pspec_tree, is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, donate: bool = True,
+             extra_opts: dict | None = None) -> dict:
+    from ..configs import get_cell
+    from .mesh import make_production_mesh
+
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = get_cell(arch, shape, mesh=mesh)
+    inputs = bundle.make_inputs()
+    in_sh = _shardings(mesh, bundle.input_pspecs)
+
+    with mesh:
+        if bundle.kind == "train":
+            state_shapes = bundle.state_shapes()
+            state_sh = _shardings(mesh, bundle.state_pspecs(state_shapes))
+            fn = jax.jit(bundle.step_fn,
+                         in_shardings=(state_sh, in_sh),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_shapes, inputs)
+        else:
+            params_shapes = bundle.params_shapes()
+            params_sh = _shardings(mesh, bundle.params_pspecs(params_shapes))
+            fn = jax.jit(bundle.step_fn, in_shardings=(params_sh, in_sh))
+            lowered = fn.lower(params_shapes, inputs)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, n_devices=512 if multi_pod else 256)
+
+    mem_d = dict(
+        argument_size=getattr(mem, "argument_size_in_bytes", None),
+        output_size=getattr(mem, "output_size_in_bytes", None),
+        temp_size=getattr(mem, "temp_size_in_bytes", None),
+        generated_code_size=getattr(mem, "generated_code_size_in_bytes", None),
+        alias_size=getattr(mem, "alias_size_in_bytes", None),
+    )
+    rec = dict(
+        arch=arch, shape=shape, kind=bundle.kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=512 if multi_pod else 256,
+        memory=mem_d,
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        collectives=coll,
+        model_flops=bundle.model_flops,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        status="ok",
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    from ..configs import all_cells
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    os.makedirs(args.out, exist_ok=True)
+    status = 0
+    for arch, shape in cells:
+        tag = "multipod" if args.multi_pod else "pod"
+        path = os.path.join(args.out, f"dryrun_{arch}_{shape}_{tag}.json")
+        if os.path.exists(path):
+            print(f"[skip] {arch} × {shape} ({tag}) — cached")
+            continue
+        try:
+            rec = run_cell(arch, shape, args.multi_pod)
+            print(f"[ok]   {arch} × {shape} ({tag}) "
+                  f"flops={rec['flops']:.3e} coll={rec['collectives']['total']:.3e}B "
+                  f"temp={rec['memory']['temp_size']/2**30:.2f}GiB "
+                  f"compile={rec['compile_s']}s")
+        except Exception as e:
+            rec = dict(arch=arch, shape=shape,
+                       mesh="2x16x16" if args.multi_pod else "16x16",
+                       status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc())
+            print(f"[FAIL] {arch} × {shape} ({tag}): {e}")
+            status = 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""BERT4Rec (arXiv:1904.06690): bidirectional transformer over item
+sequences, masked-item (Cloze) objective. Config: dim 64, 2 blocks, 2 heads,
+seq 200; output layer tied to the item embedding table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import NO_SHARDING, ShardingRules
+from ..train.state import TrackedSpec
+from .embedding import init_tables, table_specs
+from .layers import chunked_attention, dense_init, layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    compute_dtype: object = jnp.bfloat16
+
+
+def init_params(key, cfg: Bert4RecConfig):
+    ks = jax.random.split(key, 4)
+    d, H = cfg.embed_dim, cfg.n_heads
+    Dh = d // H
+    tables = init_tables(ks[0], (cfg.n_items,), d, prefix="item")
+
+    def block_init(k):
+        bk = jax.random.split(k, 6)
+        return dict(
+            wq=dense_init(bk[0], (d, H, Dh)), wk=dense_init(bk[1], (d, H, Dh)),
+            wv=dense_init(bk[2], (d, H, Dh)), wo=dense_init(bk[3], (H, Dh, d)),
+            w1=dense_init(bk[4], (d, cfg.d_ff)), w2=dense_init(bk[5], (cfg.d_ff, d)),
+            ln1_g=jnp.ones((d,)), ln1_b=jnp.zeros((d,)),
+            ln2_g=jnp.ones((d,)), ln2_b=jnp.zeros((d,)),
+        )
+
+    blocks = jax.vmap(block_init)(jax.random.split(ks[1], cfg.n_blocks))
+    dense = dict(
+        blocks=blocks,
+        pos_emb=dense_init(ks[2], (cfg.seq_len, d), scale=0.02),
+        out_bias=jnp.zeros((cfg.n_items,)),
+        final_ln_g=jnp.ones((d,)), final_ln_b=jnp.zeros((d,)),
+    )
+    return dict(tables=tables, dense=dense)
+
+
+def tracked_specs(cfg: Bert4RecConfig) -> Dict[str, TrackedSpec]:
+    return table_specs((cfg.n_items,), cfg.embed_dim, prefix="item")
+
+
+def encode(params, items: jax.Array, cfg: Bert4RecConfig,
+           rules: ShardingRules = NO_SHARDING) -> jax.Array:
+    """items (B, S) → hidden (B, S, D); bidirectional attention."""
+    cd = cfg.compute_dtype
+    x = jnp.take(params["tables"]["item_0"], items, axis=0).astype(cd)
+    x = x + params["dense"]["pos_emb"][None, : items.shape[1]].astype(cd)
+    x = rules.shard(x, "batch", None, None)
+
+    def body(x, bp):
+        h = layernorm(x, bp["ln1_g"], bp["ln1_b"])
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["wv"].astype(cd))
+        a = chunked_attention(q, k, v, causal=False, q_chunk=200, k_chunk=200,
+                              rules=rules)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, bp["wo"].astype(cd))
+        h = layernorm(x, bp["ln2_g"], bp["ln2_b"])
+        x = x + jax.nn.gelu(h @ bp["w1"].astype(cd)) @ bp["w2"].astype(cd)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["dense"]["blocks"])
+    return layernorm(x, params["dense"]["final_ln_g"], params["dense"]["final_ln_b"])
+
+
+def train_loss(params, batch, cfg: Bert4RecConfig,
+               rules: ShardingRules = NO_SHARDING):
+    """Cloze loss at masked positions, sampled softmax (tied item weights)."""
+    items, labels, mask = batch["items"], batch["labels"], batch["mask"]
+    negs = batch["neg_ids"]  # (N,) shared sampled negatives
+    h = encode(params, items, cfg, rules).astype(jnp.float32)   # (B,S,D)
+    table = params["tables"]["item_0"]
+    e_pos = jnp.take(table, labels, axis=0).astype(jnp.float32)  # (B,S,D)
+    e_neg = jnp.take(table, negs, axis=0).astype(jnp.float32)    # (N,D)
+    b_pos = jnp.take(params["dense"]["out_bias"], labels)
+    b_neg = jnp.take(params["dense"]["out_bias"], negs)
+    pos = jnp.einsum("bsd,bsd->bs", h, e_pos) + b_pos
+    neg = jnp.einsum("bsd,nd->bsn", h, e_neg) + b_neg
+    logits = jnp.concatenate([pos[..., None], neg], axis=-1)     # (B,S,1+N)
+    ce = jax.scipy.special.logsumexp(logits, axis=-1) - logits[..., 0]
+    w = mask.astype(jnp.float32)
+    loss = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == 0) * w) / jnp.maximum(jnp.sum(w), 1.0)
+    ids = jnp.concatenate([items.reshape(-1), labels.reshape(-1), negs.reshape(-1)])
+    touched = {"item_0": jnp.zeros((cfg.n_items,), jnp.bool_).at[ids].set(True)}
+    return loss, dict(accuracy=acc, touched=touched)
+
+
+def serve(params, batch, cfg: Bert4RecConfig, rules: ShardingRules = NO_SHARDING):
+    """Next-item scores for given candidates at the last position."""
+    h = encode(params, batch["items"], cfg, rules)[:, -1].astype(jnp.float32)
+    cand = batch["candidate_ids"]  # (B, C) per-example candidates
+    e = jnp.take(params["tables"]["item_0"], cand, axis=0).astype(jnp.float32)
+    b = jnp.take(params["dense"]["out_bias"], cand)
+    return jnp.einsum("bd,bcd->bc", h, e) + b
+
+
+def serve_retrieval(params, batch, cfg: Bert4RecConfig,
+                    rules: ShardingRules = NO_SHARDING):
+    """One user vs C candidates (retrieval_cand cell)."""
+    h = encode(params, batch["items"], cfg, rules)[0, -1].astype(jnp.float32)  # (D,)
+    cand = batch["candidate_ids"]  # (C,)
+    e = jnp.take(params["tables"]["item_0"], cand, axis=0).astype(jnp.float32)
+    e = rules.shard(e, "candidates", None)
+    return e @ h + jnp.take(params["dense"]["out_bias"], cand)

@@ -1,0 +1,470 @@
+"""Shared neural layers: norms, MLPs, RoPE, chunked (flash-style) attention,
+MLA, and a TPU-native MoE block (ragged_dot grouped GEMM).
+
+Everything is a pure function over explicit parameter pytrees; parameters are
+fp32 masters, compute is done in ``compute_dtype`` (bf16 by default to match
+the v5e roofline target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import NO_SHARDING, ShardingRules
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def act_fn(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron squared-ReLU
+    }[name]
+
+
+# ------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------- chunked attention
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      k_chunk: int = 1024, rules: ShardingRules = NO_SHARDING):
+    """Flash-style online-softmax attention in pure XLA (scan over KV chunks
+    inside a scan over Q chunks) — never materializes the (S, S) score
+    matrix, which is what makes ``prefill_32k`` compile within HBM.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    orig_Sq = Sq
+    # clamp chunks to the sequence — otherwise short sequences pad up to the
+    # chunk size and burn (chunk/S)² wasted attention flops
+    q_chunk = min(q_chunk, max(Sq, 8))
+    k_chunk = min(k_chunk, max(Sk, 8))
+
+    if Sq % q_chunk:
+        pad = q_chunk - Sq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    orig_Sk = Sk
+    if Sk % k_chunk:
+        pad = k_chunk - Sk % k_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk = k.shape[1]
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    neg = jnp.finfo(jnp.float32).min
+
+    # Chunks are taken with dynamic_slice on the (B, S, H, D) layout so the
+    # head dim stays a first-class dim throughout — GSPMD keeps the `model`
+    # axis pinned to heads instead of involuntarily rematerializing (which
+    # the earlier pre-transposed (nq, B, H, G, qc, D) layout provoked).
+    # q_step is checkpointed: without it the backward pass saves every
+    # (qc × kc) f32 score block across both scans — an (S, S)-sized
+    # materialization that defeats the point of chunking.
+    @jax.checkpoint
+    def q_body(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qg = qc.reshape(B, q_chunk, Hkv, G, D)
+        qg = rules.shard(qg, "batch", None, "kv_heads", None, None)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            s = rules.shard(s, "batch", "kv_heads", None, None, None)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, neg)
+            if orig_Sk != Sk:  # zero-padded keys must not enter the softmax
+                s = jnp.where((kpos < orig_Sk)[None, None, None, None], s, neg)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), neg, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)          # (B,Hkv,G,qc,D)
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # (B,qc,Hkv,G,D)
+
+    _, outs = jax.lax.scan(lambda c, qi: (None, q_body(qi)), None,
+                           jnp.arange(nq))                     # (nq,B,qc,Hkv,G,D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, D)
+    return out[:, :orig_Sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     rules: ShardingRules = NO_SHARDING):
+    """Single(-few)-token decode attention against a KV cache.
+
+    q: (B, Tq, Hq, D); caches: (B, Smax, Hkv, D); cache_len: () or (B,) —
+    number of valid cache positions. O(Smax) per new token.
+    """
+    B, Tq, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)  # (B|1, Smax)
+    s = jnp.where(valid[:, None, None, None, :], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MoE
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    gated: bool = True  # SwiGLU experts
+    capacity_factor: float = 2.0  # expert-parallel dispatch buffer (φ)
+    dispatch: str = "auto"        # auto | dense | ep (shard_map expert-parallel)
+
+
+def moe_params_init(key, d_model: int, cfg: MoEConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, F = cfg.n_experts, cfg.d_ff
+    p = dict(
+        router=dense_init(k1, (d_model, E)),
+        w_up=dense_init(k2, (E, d_model, F)),
+        w_down=dense_init(k3, (E, F, d_model), scale=1.0 / np.sqrt(F)),
+    )
+    if cfg.gated:
+        p["w_gate"] = dense_init(k4, (E, d_model, F))
+    return p
+
+
+def _moe_local(xf, ids, weights, w_up, w_gate, w_down, act, compute_dtype):
+    """Grouped-GEMM MoE on local tokens: sort-by-expert + lax.ragged_dot —
+    the TPU-native (megablox-style) formulation; no capacity, no drops."""
+    n, d = xf.shape
+    k = ids.shape[-1]
+    E = w_up.shape[0]
+    flat = ids.reshape(-1)
+    order = jnp.argsort(flat)
+    tok = order // k
+    xs = jnp.take(xf, tok, axis=0).astype(compute_dtype)
+    gs = jnp.bincount(flat, length=E).astype(jnp.int32)
+    h = jax.lax.ragged_dot(xs, w_up.astype(compute_dtype), gs,
+                           preferred_element_type=jnp.float32)
+    if w_gate is not None:
+        g = jax.lax.ragged_dot(xs, w_gate.astype(compute_dtype), gs,
+                               preferred_element_type=jnp.float32)
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = jax.lax.ragged_dot(h.astype(compute_dtype), w_down.astype(compute_dtype), gs,
+                           preferred_element_type=jnp.float32)
+    wsort = weights.reshape(-1)[order].astype(jnp.float32)
+    out = jnp.zeros((n, d), jnp.float32).at[tok].add(y * wsort[:, None])
+    return out
+
+
+def _moe_router(xf, router, top_k):
+    logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return probs, weights, ids
+
+
+def _moe_aux_loss(probs, ids, n_experts):
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], n_experts), axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _moe_ep_cell(x_l, router, w_up, w_gate, w_down, *, cfg: MoEConfig, act,
+                 compute_dtype, batch_axes, fsdp_axes):
+    """Per-(data,model)-cell expert-parallel MoE (runs inside shard_map).
+
+    Exploits the fact that activations are replicated over the `model` axis:
+    each model rank owns E/model_n experts (weights d-sharded over the FSDP
+    axis, all-gathered on use), locally gathers up to capacity C of its
+    routed tokens, runs plain MXU matmuls, scatters back, and psums over
+    `model`. No token all-to-all is needed. Overflowing tokens are dropped
+    (GShard-style capacity φ = cfg.capacity_factor).
+    """
+    n_l, d = x_l.shape
+    j = jax.lax.axis_index("model")
+    e_local = w_up.shape[0]
+    if fsdp_axes:
+        # FSDP: weights arrive (E_l, d/fsdp, F); gather the d shard on use.
+        # §Perf iteration L1: cast to compute dtype BEFORE gathering — the
+        # gathered copy is transient compute input, so bf16 halves the wire
+        # bytes at no master-precision cost (grads still accumulate in f32).
+        w_up = jax.lax.all_gather(w_up.astype(compute_dtype), fsdp_axes,
+                                  axis=1, tiled=True)
+        w_down = jax.lax.all_gather(w_down.astype(compute_dtype), fsdp_axes,
+                                    axis=2, tiled=True)
+        if w_gate is not None:
+            w_gate = jax.lax.all_gather(w_gate.astype(compute_dtype),
+                                        fsdp_axes, axis=1, tiled=True)
+
+    probs, weights, ids = _moe_router(x_l, router, cfg.top_k)
+    cap = max(int(cfg.capacity_factor * n_l * cfg.top_k / cfg.n_experts), 8)
+    cap = min(cap, n_l)
+    out = jnp.zeros((n_l, d), jnp.float32)
+    touched = jnp.zeros((cfg.n_experts,), jnp.float32).at[ids.reshape(-1)].set(1.0)
+
+    xc = x_l.astype(compute_dtype)
+    for el in range(e_local):
+        e_glob = j * e_local + el
+        mask = (ids == e_glob)
+        gate = jnp.sum(weights * mask, axis=-1)           # (n_l,)
+        sel = jnp.any(mask, axis=-1)
+        # deterministic first-come capacity: tokens in sequence order
+        prio = jnp.where(sel, jnp.arange(n_l), n_l + jnp.arange(n_l))
+        idx = jnp.argsort(prio)[:cap]
+        valid = jnp.take(sel, idx)
+        xs = jnp.take(xc, idx, axis=0)                    # (C, d)
+        h = xs @ w_up[el].astype(compute_dtype)
+        if w_gate is not None:
+            h = act(xs @ w_gate[el].astype(compute_dtype)).astype(compute_dtype) * h
+        else:
+            h = act(h).astype(compute_dtype)
+        ys = (h @ w_down[el].astype(compute_dtype)).astype(jnp.float32)
+        scale = (jnp.take(gate, idx) * valid)[:, None]
+        out = out.at[idx].add(ys * scale)
+
+    reduce_axes = ("model",) + tuple(batch_axes)
+    out = jax.lax.psum(out, "model")
+    touched = jax.lax.psum(touched, reduce_axes)
+    aux = jax.lax.pmean(_moe_aux_loss(probs, ids, cfg.n_experts), reduce_axes)
+    return out, touched, aux
+
+
+def moe_ffn(x, params, cfg: MoEConfig, *, act=jax.nn.silu,
+            compute_dtype=jnp.bfloat16,
+            rules: ShardingRules = NO_SHARDING):
+    """Mixture-of-experts FFN → (output, expert_touched_mask (E,), aux_loss).
+
+    Two dispatch paths:
+      * dense — global sort + lax.ragged_dot grouped GEMM (exact, no drops;
+        the only option without a mesh). Under pjit this global argsort
+        forces token all-gathers — the baseline the §Perf log improves on.
+      * ep    — shard_map expert parallelism (see _moe_ep_cell): local
+        capacity-bounded dispatch, zero token exchange, psum combine.
+
+    The expert-touched mask feeds Check-N-Run's incremental tracker: with
+    top-k routing only a subset of experts is updated per interval, so
+    expert blocks checkpoint incrementally exactly like embedding rows.
+    """
+    B, S, d = x.shape
+    dispatch = cfg.dispatch
+    mesh = rules.mesh
+    model_n = mesh.shape.get("model", 1) if mesh is not None else 1
+    if dispatch == "auto":
+        dispatch = ("ep" if mesh is not None and model_n > 1
+                    and cfg.n_experts % model_n == 0 else "dense")
+
+    if dispatch == "ep":
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        batch_axes = rules.axes_for("batch", B * S) or ()
+        fsdp_axes = rules.axes_for("d_model", d) or ()
+        x2 = x.reshape(-1, d)
+        bspec = P(batch_axes if batch_axes else None, None)
+        cell = functools.partial(_moe_ep_cell, cfg=cfg, act=act,
+                                 compute_dtype=compute_dtype,
+                                 batch_axes=batch_axes, fsdp_axes=fsdp_axes)
+        d_ax = fsdp_axes if fsdp_axes else None
+        in_specs = [bspec, P(None, None), P("model", d_ax, None)]
+        args = [x2, params["router"], params["w_up"]]
+        if cfg.gated:
+            in_specs.append(P("model", d_ax, None))
+            args.append(params["w_gate"])
+        in_specs.append(P("model", None, d_ax))
+        args.append(params["w_down"])
+
+        def wrapper(x_l, router, w_up, *rest):
+            if cfg.gated:
+                w_gate, w_down = rest
+            else:
+                w_gate, w_down = None, rest[0]
+            return cell(x_l, router, w_up, w_gate, w_down)
+
+        out, touched, aux = shard_map(
+            wrapper, mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=(bspec, P(None), P()),
+            check_rep=False,
+        )(*args)
+        return (out.reshape(B, S, d).astype(x.dtype), touched > 0, aux)
+
+    xf = x.reshape(-1, d)
+    probs, weights, ids = _moe_router(xf, params["router"], cfg.top_k)
+    out = _moe_local(xf, ids, weights, params["w_up"], params.get("w_gate"),
+                     params["w_down"], act, compute_dtype)
+    touched = jnp.zeros((cfg.n_experts,), jnp.bool_).at[ids.reshape(-1)].set(True)
+    aux_loss = _moe_aux_loss(probs, ids, cfg.n_experts)
+    return out.reshape(B, S, d).astype(x.dtype), touched, aux_loss
+
+
+# ------------------------------------------------------------------- MLA
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+def mla_params_init(key, d_model: int, n_heads: int, cfg: MLAConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    H = n_heads
+    return dict(
+        w_dq=dense_init(ks[0], (d_model, cfg.q_lora_rank)),
+        q_norm=jnp.ones((cfg.q_lora_rank,)),
+        w_uq=dense_init(ks[1], (cfg.q_lora_rank, H, cfg.qk_nope_dim + cfg.qk_rope_dim)),
+        w_dkv=dense_init(ks[2], (d_model, cfg.kv_lora_rank)),
+        kv_norm=jnp.ones((cfg.kv_lora_rank,)),
+        w_kpe=dense_init(ks[3], (d_model, cfg.qk_rope_dim)),
+        w_uk=dense_init(ks[4], (cfg.kv_lora_rank, H, cfg.qk_nope_dim)),
+        w_uv=dense_init(ks[5], (cfg.kv_lora_rank, H, cfg.v_head_dim)),
+        w_o=dense_init(ks[6], (H, cfg.v_head_dim, d_model)),
+    )
+
+
+def mla_attention(x, params, cfg: MLAConfig, n_heads: int, positions, *,
+                  causal: bool = True, compute_dtype=jnp.bfloat16,
+                  rules: ShardingRules = NO_SHARDING,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  cache_len=None):
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+    Caches only the kv latent (r_kv) + shared rope key (d_rope) — the cache
+    is ~(r_kv + d_rope)/ (2 * H * Dh) the size of a GQA cache, which is what
+    makes the 500k-token decode cell cheap.
+    """
+    B, S, d = x.shape
+    xc = x.astype(compute_dtype)
+    cq = rmsnorm(xc @ params["w_dq"].astype(compute_dtype), params["q_norm"])
+    q = jnp.einsum("bsr,rhd->bshd", cq, params["w_uq"].astype(compute_dtype))
+    q = rules.shard(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions)
+
+    ckv_new = rmsnorm(xc @ params["w_dkv"].astype(compute_dtype), params["kv_norm"])
+    kpe_new = apply_rope((xc @ params["w_kpe"].astype(compute_dtype))[:, :, None, :],
+                         positions)[:, :, 0, :]
+
+    if cache is not None:
+        # --- absorbed decode: scores/values computed directly against the
+        # latent cache (never expand k_nope/v to (B, S, H, D) — this is what
+        # keeps the 500k-token decode cell latent-sized).
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                                                  cache_len, axis=1)
+        kpe = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_new.astype(cache["kpe"].dtype),
+                                                  cache_len, axis=1)
+        new_cache = dict(ckv=ckv, kpe=kpe)
+        Smax = ckv.shape[1]
+        valid_len = cache_len + S
+        scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+        # absorb W_uk into q:  q_abs (B,T,H,r)
+        q_abs = jnp.einsum("bthd,rhd->bthr", q_nope, params["w_uk"].astype(compute_dtype))
+        s = (jnp.einsum("bthr,bsr->bhts", q_abs.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+             + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                          kpe.astype(jnp.float32))) * scale
+        pos = jnp.arange(Smax)
+        valid = pos[None, :] < jnp.asarray(valid_len).reshape(-1, 1)
+        s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+        p = jax.nn.softmax(s, axis=-1)
+        out_lat = jnp.einsum("bhts,bsr->bthr", p, ckv.astype(jnp.float32))
+        out = jnp.einsum("bthr,rhd->bthd", out_lat.astype(compute_dtype),
+                         params["w_uv"].astype(compute_dtype))
+    else:
+        ckv, kpe = ckv_new, kpe_new
+        new_cache = dict(ckv=ckv_new, kpe=kpe_new)
+        Sk = S
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv.astype(compute_dtype),
+                            params["w_uk"].astype(compute_dtype))
+        v = jnp.einsum("bsr,rhd->bshd", ckv.astype(compute_dtype),
+                       params["w_uv"].astype(compute_dtype))
+        k_rope = jnp.broadcast_to(kpe[:, :, None, :].astype(compute_dtype),
+                                  (B, Sk, n_heads, cfg.qk_rope_dim))
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kfull = jnp.concatenate([k_nope, k_rope], axis=-1)
+        kfull = rules.shard(kfull, "batch", None, "heads", None)
+        v = rules.shard(v, "batch", None, "heads", None)
+        out = chunked_attention(qfull, kfull, v_pad_to(v, kfull.shape[-1]),
+                                causal=causal, rules=rules)[..., : cfg.v_head_dim]
+    y = jnp.einsum("bshd,hdm->bsm", out.astype(compute_dtype),
+                   params["w_o"].astype(compute_dtype))
+    return y.astype(x.dtype), new_cache
+
+
+def v_pad_to(v, d):
+    if v.shape[-1] == d:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, d - v.shape[-1]),))

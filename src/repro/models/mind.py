@@ -1,0 +1,113 @@
+"""MIND (arXiv:1904.08030): multi-interest network with dynamic (capsule)
+routing. Config: dim 64, 4 interest capsules, 3 routing iterations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import NO_SHARDING, ShardingRules
+from ..train.state import TrackedSpec
+from .embedding import init_tables, mlp_init, mlp_apply, table_specs
+from .layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    label_aware_pow: float = 2.0
+    compute_dtype: object = jnp.bfloat16
+
+
+def init_params(key, cfg: MINDConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = init_tables(k1, (cfg.n_items,), cfg.embed_dim, prefix="item")
+    dense = dict(
+        bilinear=dense_init(k2, (cfg.embed_dim, cfg.embed_dim)),
+        # fixed (non-learned) routing-logit init, shared across users (B2I):
+        routing_init=jax.random.normal(k3, (cfg.hist_len, cfg.n_interests)) * 0.1,
+    )
+    return dict(tables=tables, dense=dense)
+
+
+def tracked_specs(cfg: MINDConfig) -> Dict[str, TrackedSpec]:
+    return table_specs((cfg.n_items,), cfg.embed_dim, prefix="item")
+
+
+def squash(s: jax.Array) -> jax.Array:
+    n2 = jnp.sum(jnp.square(s), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * s / jnp.sqrt(n2 + 1e-9)
+
+
+def interests(params, hist: jax.Array, cfg: MINDConfig,
+              rules: ShardingRules = NO_SHARDING) -> jax.Array:
+    """hist (B, T) item ids (0 = pad) → (B, K, D) interest capsules."""
+    cd = cfg.compute_dtype
+    emb = jnp.take(params["tables"]["item_0"], hist, axis=0).astype(cd)  # (B,T,D)
+    emb = rules.shard(emb, "batch", None, None)
+    valid = (hist > 0).astype(jnp.float32)  # (B,T)
+    e_hat = emb @ params["dense"]["bilinear"].astype(cd)  # (B,T,D)
+    e_hat_f32 = e_hat.astype(jnp.float32)
+    b = jnp.broadcast_to(params["dense"]["routing_init"][None],
+                         (hist.shape[0], cfg.hist_len, cfg.n_interests)).astype(jnp.float32)
+
+    def routing_iter(b, _):
+        w = jax.nn.softmax(b, axis=-1) * valid[..., None]       # (B,T,K)
+        s = jnp.einsum("btk,btd->bkd", w, e_hat_f32)            # (B,K,D)
+        v = squash(s)
+        b_new = b + jnp.einsum("bkd,btd->btk", v, e_hat_f32)
+        return b_new, v
+
+    b, vs = jax.lax.scan(routing_iter, b, None, length=cfg.capsule_iters)
+    return vs[-1]  # (B,K,D)
+
+
+def _label_aware_scores(v: jax.Array, target_emb: jax.Array, pow_: float) -> jax.Array:
+    """Label-aware attention over interests: (B,K,D) x (B,D) → (B,)."""
+    att = jnp.einsum("bkd,bd->bk", v, target_emb)
+    w = jax.nn.softmax(jnp.power(jnp.abs(att) + 1e-9, pow_) * jnp.sign(att), axis=-1)
+    user = jnp.einsum("bk,bkd->bd", w, v)
+    return jnp.einsum("bd,bd->b", user, target_emb)
+
+
+def train_loss(params, batch, cfg: MINDConfig, rules: ShardingRules = NO_SHARDING):
+    """Sampled-softmax over (target, shared negatives)."""
+    hist, target, negs = batch["hist"], batch["target"], batch["neg_ids"]
+    v = interests(params, hist, cfg, rules)  # (B,K,D)
+    table = params["tables"]["item_0"]
+    e_t = jnp.take(table, target, axis=0).astype(jnp.float32)   # (B,D)
+    e_n = jnp.take(table, negs, axis=0).astype(jnp.float32)     # (N,D)
+    pos = _label_aware_scores(v, e_t, cfg.label_aware_pow)       # (B,)
+    # negatives scored against the best-matching interest (serving semantics)
+    neg = jnp.max(jnp.einsum("bkd,nd->bkn", v, e_n), axis=1)     # (B,N)
+    logits = jnp.concatenate([pos[:, None], neg], axis=-1)
+    loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) - logits[:, 0])
+    acc = jnp.mean(jnp.argmax(logits, axis=-1) == 0)
+    ids = jnp.concatenate([hist.reshape(-1), target.reshape(-1), negs.reshape(-1)])
+    touched = {"item_0": jnp.zeros((cfg.n_items,), jnp.bool_).at[ids].set(True)}
+    return loss, dict(accuracy=acc, touched=touched)
+
+
+def serve(params, batch, cfg: MINDConfig, rules: ShardingRules = NO_SHARDING):
+    """Score (user hist, target) pairs — serve_p99/serve_bulk cells."""
+    v = interests(params, batch["hist"], cfg, rules)
+    e_t = jnp.take(params["tables"]["item_0"], batch["target"], axis=0).astype(jnp.float32)
+    return _label_aware_scores(v, e_t, cfg.label_aware_pow)
+
+
+def serve_retrieval(params, batch, cfg: MINDConfig,
+                    rules: ShardingRules = NO_SHARDING):
+    """One user's interests vs C candidates: max-over-interests dot."""
+    v = interests(params, batch["hist"], cfg, rules)[0]  # (K,D)
+    cand = jnp.take(params["tables"]["item_0"], batch["candidate_ids"], axis=0)
+    cand = rules.shard(cand.astype(jnp.float32), "candidates", None)
+    return jnp.max(cand @ v.T.astype(jnp.float32), axis=-1)  # (C,)

@@ -1,0 +1,357 @@
+"""Transformer LM family: covers olmoe-1b-7b / dbrx-132b (MoE), nemotron-4-15b
+(squared-ReLU dense), qwen2-0.5b (GQA + QKV bias), minicpm3-4b (MLA).
+
+Design points
+  * scan-over-layers with stacked weights (MaxText-style) — compile time and
+    HLO size stay flat in depth; remat on the layer body.
+  * chunked online-softmax attention for training/prefill (no (S,S) scores).
+  * KV-cache decode path (``serve_step``); MLA caches latents only.
+  * MoE via sort + ``lax.ragged_dot`` grouped GEMM; per-layer expert-touched
+    masks feed Check-N-Run's incremental tracker (expert-granular increments).
+  * fp32 master params, bf16 compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import NO_SHARDING, ShardingRules
+from ..train.state import TrackedSpec
+from .layers import (
+    MLAConfig,
+    MoEConfig,
+    act_fn,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dense_init,
+    mla_attention,
+    mla_params_init,
+    moe_ffn,
+    moe_params_init,
+    rmsnorm,
+    v_pad_to,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated: bool = True
+    attn_bias: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 1e4
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    aux_loss_coef: float = 0.01
+    pure_fsdp_train: bool = False  # §Perf L2: ZeRO-3 mapping for TP-unfriendly archs
+
+    @property
+    def param_count(self) -> int:
+        c = self.vocab * self.d_model * 2  # embed + unembed
+        per_layer = 0
+        if self.mla:
+            m = self.mla
+            per_layer += self.d_model * m.q_lora_rank
+            per_layer += m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+            per_layer += self.d_model * (m.kv_lora_rank + m.qk_rope_dim)
+            per_layer += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            per_layer += self.n_heads * m.v_head_dim * self.d_model
+        else:
+            per_layer += self.d_model * self.n_heads * self.head_dim * 2
+            per_layer += self.d_model * self.n_kv_heads * self.head_dim * 2
+        if self.moe:
+            e = self.moe
+            n_mats = 3 if e.gated else 2
+            per_layer += self.d_model * e.n_experts + e.n_experts * self.d_model * e.d_ff * n_mats
+        else:
+            n_mats = 3 if self.gated else 2
+            per_layer += self.d_model * self.d_ff * n_mats
+        return c + self.n_layers * per_layer
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.moe:
+            return self.param_count
+        e = self.moe
+        n_mats = 3 if e.gated else 2
+        full_moe = self.n_layers * e.n_experts * self.d_model * e.d_ff * n_mats
+        active_moe = self.n_layers * e.top_k * self.d_model * e.d_ff * n_mats
+        return self.param_count - full_moe + active_moe
+
+
+# ---------------------------------------------------------------- params
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, 16)
+    L, d = cfg.n_layers, cfg.d_model
+
+    def stack(fn, base_key):
+        return jax.vmap(fn)(jax.random.split(base_key, L))
+
+    blocks: Dict[str, Any] = dict(
+        ln1=jnp.ones((L, d)), ln2=jnp.ones((L, d)))
+    if cfg.mla:
+        blocks["mla"] = stack(lambda k: mla_params_init(k, d, cfg.n_heads, cfg.mla), keys[0])
+    else:
+        H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        blocks["attn"] = stack(lambda k: _attn_init(k, d, H, Hkv, Dh, cfg.attn_bias), keys[0])
+    if cfg.moe:
+        blocks["moe"] = stack(lambda k: moe_params_init(k, d, cfg.moe), keys[1])
+    else:
+        blocks["ffn"] = stack(lambda k: _ffn_init(k, d, cfg.d_ff, cfg.gated), keys[1])
+
+    dense = dict(
+        blocks=blocks,
+        final_norm=jnp.ones((d,)),
+        w_out=dense_init(keys[2], (d, cfg.vocab)),
+    )
+    tables = dict(tok_emb=dense_init(keys[3], (cfg.vocab, d), scale=0.02))
+    return dict(tables=tables, dense=dense)
+
+
+def _attn_init(key, d, H, Hkv, Dh, bias):
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], (d, H, Dh)),
+        wk=dense_init(ks[1], (d, Hkv, Dh)),
+        wv=dense_init(ks[2], (d, Hkv, Dh)),
+        wo=dense_init(ks[3], (H, Dh, d), scale=1.0 / np.sqrt(H * Dh)),
+    )
+    if bias:
+        p["bq"] = jnp.zeros((H, Dh))
+        p["bk"] = jnp.zeros((Hkv, Dh))
+        p["bv"] = jnp.zeros((Hkv, Dh))
+    return p
+
+
+def _ffn_init(key, d, f, gated):
+    ks = jax.random.split(key, 3)
+    p = dict(w1=dense_init(ks[0], (d, f)), w2=dense_init(ks[1], (f, d), scale=1.0 / np.sqrt(f)))
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def tracked_specs(cfg: TransformerConfig) -> Dict[str, TrackedSpec]:
+    """Token embedding rows always; MoE expert blocks when present
+    (DESIGN.md §Arch-applicability)."""
+    specs = {
+        "tok_emb": TrackedSpec(path=("tables", "tok_emb"), units=cfg.vocab,
+                               rows=cfg.vocab, dim=cfg.d_model),
+    }
+    if cfg.moe:
+        L, E, d, F = cfg.n_layers, cfg.moe.n_experts, cfg.d_model, cfg.moe.d_ff
+        specs["moe_w_up"] = TrackedSpec(path=("dense", "blocks", "moe", "w_up"),
+                                        units=L * E, rows=L * E * d, dim=F,
+                                        rowwise_aux=False)
+        specs["moe_w_down"] = TrackedSpec(path=("dense", "blocks", "moe", "w_down"),
+                                          units=L * E, rows=L * E * F, dim=d,
+                                          rowwise_aux=False)
+        if cfg.moe.gated:
+            specs["moe_w_gate"] = TrackedSpec(path=("dense", "blocks", "moe", "w_gate"),
+                                              units=L * E, rows=L * E * d, dim=F,
+                                              rowwise_aux=False)
+    return specs
+
+
+# --------------------------------------------------------------- forward
+
+
+def _attention(x, p, cfg: TransformerConfig, positions, rules, cache=None, cache_len=None):
+    cd = cfg.compute_dtype
+    B, S, _ = x.shape
+    xc = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xc, p["wv"].astype(cd))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = rules.shard(q, "batch", None, "heads", None)
+
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                                 cache_len, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                                 cache_len, axis=1)
+        new_cache = dict(k=kc, v=vc)
+        out = decode_attention(q, kc.astype(cd), vc.astype(cd), cache_len + S, rules=rules)
+    else:
+        new_cache = dict(k=k, v=v)
+        out = chunked_attention(q, k, v, causal=True, rules=rules)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return y.astype(x.dtype), new_cache
+
+
+def _ffn(x, p, cfg: TransformerConfig, rules):
+    cd = cfg.compute_dtype
+    act = act_fn(cfg.act)
+    xc = x.astype(cd)
+    h = xc @ p["w1"].astype(cd)
+    if cfg.gated:
+        h = act(xc @ p["wg"].astype(cd)).astype(cd) * h
+    else:
+        h = act(h).astype(cd)
+    h = rules.shard(h, "batch", None, "ff")
+    return (h @ p["w2"].astype(cd)).astype(x.dtype)
+
+
+def _layer(x, lp, cfg: TransformerConfig, positions, rules,
+           cache=None, cache_len=None):
+    """One transformer block. Returns (x, new_cache, expert_touched|None, aux)."""
+    h = rmsnorm(x, lp["ln1"])
+    if cfg.mla:
+        a, new_cache = mla_attention(h, lp["mla"], cfg.mla, cfg.n_heads, positions,
+                                     compute_dtype=cfg.compute_dtype, rules=rules,
+                                     cache=cache, cache_len=cache_len)
+    else:
+        a, new_cache = _attention(h, lp["attn"], cfg, positions, rules, cache, cache_len)
+    x = x + a
+    h = rmsnorm(x, lp["ln2"])
+    if cfg.moe:
+        f, touched, aux = moe_ffn(h, lp["moe"], cfg.moe, act=act_fn(cfg.act),
+                                  compute_dtype=cfg.compute_dtype, rules=rules)
+    else:
+        f, touched, aux = _ffn(h, lp["ffn"], cfg, rules), None, jnp.zeros((), jnp.float32)
+    x = x + f
+    # sequence-parallel layout for the inter-block residual: the (L,B,S,d)
+    # remat/scan carries are the dominant train-time HBM term; sharding S
+    # over `model` cuts them mesh.model-fold (all-gathered back on use).
+    x = rules.shard(x, "batch", "seq_sp" if cache is None else None, None)
+    return x, new_cache, touched, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            rules: ShardingRules = NO_SHARDING,
+            caches=None, cache_len=None, collect_cache: bool = False):
+    """Full forward. tokens (B, S) → hidden (B, S, d).
+
+    Returns (hidden, new_caches, expert_touched (L,E)|None, aux_loss).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["tables"]["tok_emb"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = rules.shard(x, "batch", None, None)
+    if cache_len is None and caches is None:
+        positions = jnp.arange(S)[None, :]
+    else:
+        base = 0 if cache_len is None else cache_len
+        positions = base + jnp.arange(S)[None, :]
+
+    blocks = params["dense"]["blocks"]
+
+    def body(x, layer_in):
+        lp, cache_l = layer_in
+        x, new_cache, touched, aux = _layer(
+            x, lp, cfg, positions, rules, cache=cache_l, cache_len=cache_len)
+        ys = (new_cache if (collect_cache or caches is not None) else None,
+              touched, aux)
+        return x, ys
+
+    layer_fn = jax.checkpoint(body) if cfg.remat and caches is None else body
+    x, (new_caches, touched, aux) = jax.lax.scan(layer_fn, x, (blocks, caches))
+    x = rmsnorm(x, params["dense"]["final_norm"])
+    aux_loss = jnp.sum(aux) if aux is not None else jnp.zeros((), jnp.float32)
+    return x, new_caches, touched, aux_loss
+
+
+def logits_fn(params, hidden, cfg: TransformerConfig, rules: ShardingRules):
+    logits = jnp.einsum("bsd,dv->bsv", hidden.astype(cfg.compute_dtype),
+                        params["dense"]["w_out"].astype(cfg.compute_dtype))
+    return rules.shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def _ce_chunked(params, hidden, labels, cfg: TransformerConfig,
+                rules: ShardingRules, s_chunk: int = 512):
+    """Sequence-chunked cross-entropy: the (B, S, V) logits tensor is never
+    materialized — each chunk's logits are computed, reduced, and (in the
+    bwd pass, via remat) recomputed. Gold logits use a masked iota sum so the
+    model-sharded vocab dim is never gathered."""
+    B, S, d = hidden.shape
+    s_chunk = min(s_chunk, S)
+    while S % s_chunk:
+        s_chunk -= 1
+    n = S // s_chunk
+
+    @jax.checkpoint
+    def body(carry, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * s_chunk, s_chunk, axis=1)
+        lab = jax.lax.dynamic_slice_in_dim(labels, i * s_chunk, s_chunk, axis=1)
+        logits = logits_fn(params, h, cfg, rules)           # (B, sc, V) f32
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(iota == lab[..., None].astype(jnp.int32),
+                                 logits, 0.0), axis=-1)
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return total / (B * S)
+
+
+def train_loss(params, batch, cfg: TransformerConfig,
+               rules: ShardingRules = NO_SHARDING):
+    """Causal-LM cross-entropy. Returns (loss, aux) with touched masks."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    hidden, _, touched_moe, aux_loss = forward(params, tokens, cfg, rules)
+    ce = _ce_chunked(params, hidden, labels, cfg, rules)
+    loss = ce + cfg.aux_loss_coef * aux_loss
+    touched = {"tok_emb": jnp.zeros((cfg.vocab,), jnp.bool_).at[tokens.reshape(-1)].set(True)}
+    if cfg.moe and touched_moe is not None:
+        expert_mask = touched_moe.reshape(-1)  # (L*E,)
+        touched["moe_w_up"] = expert_mask
+        touched["moe_w_down"] = expert_mask
+        if cfg.moe.gated:
+            touched["moe_w_gate"] = expert_mask
+    return loss, dict(ce=ce, aux_loss=aux_loss, touched=touched)
+
+
+# ---------------------------------------------------------------- serving
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    L = cfg.n_layers
+    if cfg.mla:
+        m = cfg.mla
+        return dict(ckv=jnp.zeros((L, batch, max_len, m.kv_lora_rank), dtype),
+                    kpe=jnp.zeros((L, batch, max_len, m.qk_rope_dim), dtype))
+    return dict(k=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                v=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype))
+
+
+def decode_step(params, tokens, caches, cache_len, cfg: TransformerConfig,
+                rules: ShardingRules = NO_SHARDING):
+    """One decode step: tokens (B, T_new) + caches → (logits (B, T_new, V),
+    new caches). ``decode_*`` / ``long_*`` dry-run cells lower this."""
+    hidden, new_caches, _, _ = forward(params, tokens, cfg, rules,
+                                       caches=caches, cache_len=cache_len)
+    logits = logits_fn(params, hidden, cfg, rules)
+    return logits, new_caches
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig,
+                 rules: ShardingRules = NO_SHARDING):
+    """Prefill: full forward returning last-position logits + the KV cache
+    (``prefill_*`` dry-run cells)."""
+    hidden, caches, _, _ = forward(params, tokens, cfg, rules, collect_cache=True)
+    logits = logits_fn(params, hidden[:, -1:, :], cfg, rules)
+    return logits, caches

@@ -1,0 +1,126 @@
+"""Pure-function optimizers (no optax dependency).
+
+The DLRM-standard split (paper §2.2): embedding tables use **row-wise
+AdaGrad** (one accumulator per row — the per-row state is checkpointed
+incrementally together with its rows), dense parameters use AdaGrad/AdamW.
+
+An ``Optimizer`` is an (init, update) pair over a pytree; ``update`` returns
+*additive* updates. ``split_optimizer`` applies one optimizer to
+``params["tables"]`` and another to ``params["dense"]`` (the repro-wide
+parameter convention).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        del params
+        new_acc = jax.tree.map(lambda a, g: a + jnp.square(g), state, grads)
+        upd = jax.tree.map(lambda g, a: -lr * g / (jnp.sqrt(a) + eps), grads, new_acc)
+        return upd, new_acc
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        return dict(mu=zeros(), nu=zeros(), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def leaf(m, v, p):
+            step = m / c1 / (jnp.sqrt(v / c2) + eps)
+            return -lr * (step + weight_decay * p)
+
+        upd = jax.tree.map(leaf, mu, nu, params)
+        return upd, dict(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    """Row-wise AdaGrad for 2-D embedding tables (FBGEMM/DLRM standard).
+
+    State per table: one f32 accumulator per ROW — the per-row optimizer
+    state that Check-N-Run checkpoints incrementally alongside the row.
+    Untouched rows receive zero gradient, so their accumulator (and row) are
+    bit-identical across an interval — exactly the sparsity the incremental
+    checkpoint exploits.
+    """
+
+    def init(params):
+        return jax.tree.map(lambda t: jnp.zeros((t.shape[0],), jnp.float32), params)
+
+    def update(grads, state, params):
+        del params
+
+        def leaf(g, a):
+            g2 = jnp.mean(jnp.square(g), axis=tuple(range(1, g.ndim)))
+            new_a = a + g2
+            shape = (-1,) + (1,) * (g.ndim - 1)
+            upd = -lr * g / (jnp.sqrt(new_a).reshape(shape) + eps)
+            return upd, new_a
+
+        flat = jax.tree.map(leaf, grads, state)
+        upd = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return upd, new_state
+
+    return Optimizer(init, update)
+
+
+def split_optimizer(table_opt: Optimizer, dense_opt: Optimizer) -> Optimizer:
+    """Tables → table_opt, everything else → dense_opt (repro convention:
+    ``params = {"tables": {...}, "dense": {...}}``)."""
+
+    def init(params):
+        return dict(tables=table_opt.init(params["tables"]),
+                    dense=dense_opt.init(params["dense"]))
+
+    def update(grads, state, params):
+        t_upd, t_state = table_opt.update(grads["tables"], state["tables"], params["tables"])
+        d_upd, d_state = dense_opt.update(grads["dense"], state["dense"], params["dense"])
+        return dict(tables=t_upd, dense=d_upd), dict(tables=t_state, dense=d_state)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

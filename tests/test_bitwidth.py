@@ -1,0 +1,45 @@
+"""Dynamic bit-width selection (§5.2.1)."""
+
+from repro.core.bitwidth import (
+    BitwidthController,
+    RESTORE_BUDGET,
+    expected_failures,
+    select_bits,
+)
+
+
+def test_budget_table_matches_fig10():
+    assert RESTORE_BUDGET == {2: 1, 3: 3, 4: 20, 8: 100}
+
+
+def test_select_bits_thresholds():
+    assert select_bits(0.5) == 2
+    assert select_bits(1.0) == 2
+    assert select_bits(2.0) == 3
+    assert select_bits(3.0) == 3
+    assert select_bits(10.0) == 4
+    assert select_bits(50.0) == 8
+
+
+def test_expected_failures_scaling():
+    # 16 nodes, p=0.001/hr, 72 hours → 1.152 expected failures → 3 bits
+    e = expected_failures(16, 0.001, 72)
+    assert abs(e - 1.152) < 1e-9
+    assert select_bits(e) == 3
+
+
+def test_controller_fallback_to_8bit():
+    c = BitwidthController(n_nodes=16, p_node_fail_per_hour=0.0005,
+                           expected_train_hours=72)  # E≈0.576 → 2-bit
+    assert c.bits == 2
+    c.on_restore()  # budget for 2-bit is 1 → immediately widen
+    assert c.bits == 8
+    assert c.current_config().bits == 8
+
+
+def test_controller_serialization():
+    c = BitwidthController(4, 0.01, 100)
+    d = c.to_dict()
+    c2 = BitwidthController(4, 0.01, 100)
+    c2.load_dict(d)
+    assert c2.bits == c.bits

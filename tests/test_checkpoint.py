@@ -1,0 +1,183 @@
+"""Checkpoint manager integration tests: policies, quantization, chains,
+retention, cancellation, async writes."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckNRunManager,
+    CheckpointConfig,
+    InMemoryStore,
+    PAPER_DEFAULTS,
+    Snapshot,
+    ThrottledStore,
+)
+from repro.core import manifest as mf
+
+
+def make_snap(step, table, touched_idx, acc=None, dense=None):
+    R = table.shape[0]
+    t = np.zeros(R, dtype=bool)
+    t[touched_idx] = True
+    return Snapshot(
+        step=step, tables={"emb": table.copy()},
+        row_state={"emb": ({"acc": acc.copy()} if acc is not None else {})},
+        touched={"emb": t},
+        dense=dict(dense or {}), extra={})
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def test_full_restore_exact(rng):
+    table = rng.normal(size=(1000, 16)).astype(np.float32)
+    acc = np.abs(rng.normal(size=1000)).astype(np.float32)
+    dense = {"w": rng.normal(size=(8, 8)).astype(np.float32)}
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(policy="full_only", quant=None,
+                                                   async_write=False))
+    mgr.save(make_snap(10, table, [], acc, dense)).result()
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+    np.testing.assert_array_equal(rs.row_state["emb"]["acc"], acc)
+    np.testing.assert_array_equal(rs.dense["w"], dense["w"])
+
+
+@pytest.mark.parametrize("policy", ["one_shot", "consecutive", "intermittent"])
+def test_incremental_restore_exact(policy, rng):
+    R, D = 2000, 8
+    table = rng.normal(size=(R, D)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy=policy, quant=None, async_write=False, keep_latest=10,
+        chunk_rows=256))
+    for step in range(1, 7):
+        idx = rng.choice(R, size=300, replace=False)
+        table[idx] += rng.normal(size=(300, D)).astype(np.float32)
+        mgr.save(make_snap(step, table, idx)).result()
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+
+
+def test_incremental_smaller_than_full(rng):
+    R, D = 5000, 16
+    table = rng.normal(size=(R, D)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(policy="one_shot", quant=None,
+                                                   async_write=False))
+    r1 = mgr.save(make_snap(1, table, np.arange(R))).result()
+    idx = rng.choice(R, size=R // 10, replace=False)
+    table[idx] += 1.0
+    r2 = mgr.save(make_snap(2, table, idx)).result()
+    assert r2.kind == "incremental"
+    assert r2.nbytes < 0.2 * r1.nbytes
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantized_restore_bounded_error(bits, rng):
+    R, D = 1024, 32
+    table = rng.normal(size=(R, D)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy="full_only", quant=PAPER_DEFAULTS[bits], async_write=False))
+    mgr.save(make_snap(1, table, np.arange(R))).result()
+    rs = mgr.restore()
+    deq = rs.tables["emb"]
+    # per-row error bounded by the quantization step of that row's range,
+    # plus: adaptive search may clip range tails (bits<8), and fp16
+    # scale/zero metadata adds ~2^-11 of the row range
+    rng_row = table.max(1) - table.min(1)
+    step = rng_row / (2 ** bits - 1)
+    clip_allow = 0.6 * rng_row if bits < 8 else 0.0
+    err = np.abs(deq - table).max(axis=1)
+    assert np.all(err <= step + clip_allow + 1.5e-3 * rng_row + 1e-5)
+    # and the mean error must stay within the un-clipped step
+    assert np.abs(deq - table).mean() <= step.mean()
+
+
+def test_quantized_payload_smaller(rng):
+    R, D = 4096, 64
+    table = rng.normal(size=(R, D)).astype(np.float32)
+    full_store, q_store = InMemoryStore(), InMemoryStore()
+    CheckNRunManager(full_store, CheckpointConfig(policy="full_only", quant=None,
+                                                  async_write=False)) \
+        .save(make_snap(1, table, np.arange(R))).result()
+    CheckNRunManager(q_store, CheckpointConfig(policy="full_only",
+                                               quant=PAPER_DEFAULTS[4],
+                                               async_write=False)) \
+        .save(make_snap(1, table, np.arange(R))).result()
+    ratio = full_store.counters.bytes_written / q_store.counters.bytes_written
+    assert ratio > 6.0  # 32-bit → 4-bit + per-row metadata ≈ 7.5×
+
+
+def test_retention_keeps_recovery_chain(rng):
+    R = 500
+    table = rng.normal(size=(R, 4)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy="consecutive", quant=None, async_write=False, keep_latest=1))
+    for step in range(1, 5):
+        idx = rng.choice(R, 50, replace=False)
+        table[idx] += 1
+        mgr.save(make_snap(step, table, idx)).result()
+    # keep_latest=1 must still retain the chain needed to restore step 4
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+    assert 1 in mf.list_steps(store)  # the baseline survives retention
+
+
+def test_async_write_and_non_overlap(rng):
+    R = 20000
+    table = rng.normal(size=(R, 16)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy="full_only", quant=None, async_write=True, keep_latest=3))
+    f1 = mgr.save(make_snap(1, table, np.arange(R)))
+    f2 = mgr.save(make_snap(2, table, np.arange(R)))  # waits for f1 (overlap=wait)
+    assert f1.done()  # non-overlap: second save implies first completed
+    f2.result()
+    assert mf.latest_step(store) == 2
+    mgr.close()
+
+
+def test_cancel_straggler_write(rng):
+    """§3.3: a slow checkpoint is cancelled so the next gets full bandwidth;
+    rows from the cancelled interval roll into the next checkpoint."""
+    R = 4000
+    table = rng.normal(size=(R, 32)).astype(np.float32)
+    cancel_evt = threading.Event()
+    slow = ThrottledStore(InMemoryStore(), write_bytes_per_sec=50_000,
+                          cancel_event=cancel_evt)
+    mgr = CheckNRunManager(slow, CheckpointConfig(
+        policy="one_shot", quant=None, async_write=True, overlap="cancel",
+        chunk_rows=128))
+    mgr._cancel = cancel_evt  # share the event with the throttled store
+    f1 = mgr.save(make_snap(1, table, np.arange(R)))
+    time.sleep(0.1)
+    slow.bw = 1e12  # un-throttle for the second save
+    f2 = mgr.save(make_snap(2, table, np.arange(R)))  # cancels f1
+    r1, r2 = f1.result(), f2.result()
+    assert r1.cancelled
+    assert r2.kind == "full" and not r2.cancelled
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+    mgr.close()
+
+
+def test_checksum_validation(rng):
+    table = rng.normal(size=(100, 4)).astype(np.float32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(policy="full_only", quant=None,
+                                                   async_write=False))
+    mgr.save(make_snap(1, table, np.arange(100))).result()
+    key = [k for k in store.list("chunks/") if "emb" in k][0]
+    blob = bytearray(store.get(key))
+    blob[0] ^= 0xFF
+    store.put(key, bytes(blob))
+    with pytest.raises(IOError):
+        mgr.restore()

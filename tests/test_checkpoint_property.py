@@ -1,0 +1,80 @@
+"""Stateful property test: under ANY sequence of (touch-pattern, policy,
+quantization, cancellation) events, restore() must reconstruct the live
+table exactly (fp32) or within the quantization step (quantized)."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    CheckNRunManager,
+    CheckpointConfig,
+    InMemoryStore,
+    PAPER_DEFAULTS,
+    Snapshot,
+)
+
+ROWS, DIM = 300, 8
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    policy=st.sampled_from(["one_shot", "consecutive", "intermittent", "full_only"]),
+    bits=st.sampled_from([0, 4, 8]),
+    n_intervals=st.integers(2, 6),
+    keep_latest=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_restore_always_matches_live(policy, bits, n_intervals, keep_latest, seed):
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(ROWS, DIM)).astype(np.float32)
+    acc = np.abs(rng.normal(size=ROWS)).astype(np.float32)
+    quant = PAPER_DEFAULTS[bits] if bits else None
+    mgr = CheckNRunManager(InMemoryStore(), CheckpointConfig(
+        policy=policy, quant=quant, async_write=False,
+        keep_latest=keep_latest, chunk_rows=64))
+    for step in range(1, n_intervals + 1):
+        k = int(rng.integers(1, ROWS // 2))
+        idx = rng.choice(ROWS, size=k, replace=False)
+        table[idx] += rng.normal(size=(k, DIM)).astype(np.float32)
+        acc[idx] += 0.1
+        t = np.zeros(ROWS, bool)
+        t[idx] = True
+        mgr.save(Snapshot(step=step, tables={"T": table.copy()},
+                          row_state={"T": {"acc": acc.copy()}},
+                          touched={"T": t}, dense={}, extra={})).result()
+    rs = mgr.restore()
+    assert rs.step == n_intervals
+    np.testing.assert_array_equal(rs.row_state["T"]["acc"], acc)
+    if bits == 0:
+        np.testing.assert_array_equal(rs.tables["T"], table)
+    else:
+        # per-row error bounded by that row's quantization step (+fp16 meta)
+        step_sz = (table.max(1) - table.min(1)) / (2 ** bits - 1)
+        err = np.abs(rs.tables["T"] - table).max(axis=1)
+        assert np.all(err <= step_sz * 1.01 + 2e-2)
+    mgr.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 8))
+def test_touched_union_is_complete(seed, n):
+    """Rows touched in ANY interval since baseline appear in the cumulative
+    increment — no update may be lost (one-shot policy)."""
+    rng = np.random.default_rng(seed)
+    table = np.zeros((ROWS, DIM), np.float32)
+    mgr = CheckNRunManager(InMemoryStore(), CheckpointConfig(
+        policy="one_shot", quant=None, async_write=False, keep_latest=5))
+    all_touched = np.zeros(ROWS, bool)
+    for step in range(1, n + 1):
+        idx = rng.choice(ROWS, size=10, replace=False)
+        table[idx] = step
+        all_touched[idx] = True
+        t = np.zeros(ROWS, bool)
+        t[idx] = True
+        mgr.save(Snapshot(step=step, tables={"T": table.copy()},
+                          row_state={"T": {}}, touched={"T": t},
+                          dense={}, extra={})).result()
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["T"], table)
+    mgr.close()

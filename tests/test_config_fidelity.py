@@ -1,0 +1,52 @@
+"""Config fidelity: full (non-reduced) configs must match the published
+architecture numbers — parameter counts within tolerance of the models'
+names, and the exact structural hyper-parameters from the assignment."""
+
+import pytest
+
+from repro.configs import _module
+
+
+@pytest.mark.parametrize("arch,total_b,active_b,tol", [
+    ("olmoe-1b-7b", 6.9e9, 1.3e9, 0.25),
+    ("dbrx-132b", 132e9, 36e9, 0.15),
+    ("nemotron-4-15b", 15e9, 15e9, 0.25),
+    ("qwen2-0.5b", 0.5e9, 0.5e9, 0.35),
+    ("minicpm3-4b", 4e9, 4e9, 0.30),
+])
+def test_lm_param_counts(arch, total_b, active_b, tol):
+    cfg = _module(arch).make_config(reduced=False)
+    assert cfg.param_count == pytest.approx(total_b, rel=tol), \
+        f"{arch}: {cfg.param_count/1e9:.2f}B vs expected {total_b/1e9}B"
+    assert cfg.active_param_count == pytest.approx(active_b, rel=tol)
+
+
+def test_assignment_hyperparams():
+    c = _module("olmoe-1b-7b").make_config(False)
+    assert (c.n_layers, c.d_model, c.n_heads, c.moe.n_experts, c.moe.top_k,
+            c.moe.d_ff, c.vocab) == (16, 2048, 16, 64, 8, 1024, 50304)
+    c = _module("dbrx-132b").make_config(False)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.moe.n_experts,
+            c.moe.top_k, c.d_ff, c.vocab) == (40, 6144, 48, 8, 16, 4, 10752, 100352)
+    c = _module("nemotron-4-15b").make_config(False)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.act, c.gated) == (32, 6144, 48, 8, 24576, 256000, "relu2", False)
+    c = _module("qwen2-0.5b").make_config(False)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.attn_bias) == (24, 896, 14, 2, 4864, True)
+    c = _module("minicpm3-4b").make_config(False)
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (62, 2560, 40, 6400)
+    assert (c.mla.q_lora_rank, c.mla.kv_lora_rank, c.mla.qk_nope_dim,
+            c.mla.qk_rope_dim) == (768, 256, 64, 32)
+    c = _module("dimenet").make_config(False)
+    assert (c.n_blocks, c.d_hidden, c.n_bilinear, c.n_spherical,
+            c.n_radial) == (6, 128, 8, 7, 6)
+    c = _module("xdeepfm").make_config(False)
+    assert (c.n_sparse, c.embed_dim, c.cin_layers, c.mlp) == (39, 10, (200, 200, 200), (400, 400))
+    c = _module("dlrm-rm2").make_config(False)
+    assert (c.n_dense, c.n_sparse, c.embed_dim, c.bot_mlp, c.top_mlp) == (
+        13, 26, 64, (512, 256, 64), (512, 512, 256, 1))
+    c = _module("mind").make_config(False)
+    assert (c.embed_dim, c.n_interests, c.capsule_iters) == (64, 4, 3)
+    c = _module("bert4rec").make_config(False)
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (64, 2, 2, 200)

@@ -1,0 +1,67 @@
+"""Incremental-policy unit tests (paper §4.1, §4.1.1)."""
+
+import pytest
+
+from repro.core.incremental import (
+    ConsecutiveIncrement,
+    FullOnly,
+    IntermittentBaseline,
+    OneShotBaseline,
+    make_policy,
+)
+
+
+def test_one_shot_sequence():
+    p = OneShotBaseline()
+    assert p.decide(1) == "full"
+    p.observe(1, "full", 1000)
+    for s in (2, 3, 4):
+        assert p.decide(s) == "incremental"
+        p.observe(s, "incremental", 100 * s)
+    assert p.cumulative_mask
+
+
+def test_consecutive_mask_semantics():
+    p = ConsecutiveIncrement()
+    assert not p.cumulative_mask
+
+
+def test_intermittent_predictor_formula():
+    """§4.1.1: full at interval i+1 iff F_c = 1 + ΣS_k <= I_c = (i+1)·S_i."""
+    p = IntermittentBaseline()
+    assert p.decide(0) == "full"
+    p.observe(0, "full", 1_000_000)
+    # growing increments mirroring Fig. 8: 25%, 35%, 43%, 50% ...
+    sizes = [0.25, 0.35, 0.43, 0.50, 0.55]
+    decisions = []
+    for i, frac in enumerate(sizes):
+        d = p.decide(i + 1)
+        decisions.append(d)
+        if d == "full":
+            p.observe(i + 1, "full", 1_000_000)
+        else:
+            p.observe(i + 1, "incremental", int(frac * 1_000_000))
+    # manual check of the predictor at the step it first fires:
+    # after S=[.25,.35,.43,.50]: F_c = 1+1.53 = 2.53; I_c = 5*0.50 = 2.50 →
+    # incremental (F_c > I_c); after adding .55: F_c=3.08, I_c=6*.55=3.30 → full
+    assert decisions[:4] == ["incremental"] * 4
+    # at this point one more interval triggers the full checkpoint
+    assert p.decide(6) == "full"
+
+
+def test_full_only():
+    p = FullOnly()
+    for s in range(5):
+        assert p.decide(s) == "full"
+
+
+def test_registry_roundtrip():
+    for name in ("full_only", "one_shot", "consecutive", "intermittent"):
+        p = make_policy(name)
+        p.observe(1, "full", 10)
+        d = p.to_dict()
+        q = make_policy(name)
+        q.load_dict(d)
+        assert q.state.full_size_bytes == 10
+    with pytest.raises(ValueError):
+        make_policy("nope")

@@ -1,0 +1,30 @@
+"""Bit-packing property tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_bits, packed_nbytes, unpack_bits
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.integers(1, 8), n=st.integers(0, 2000),
+       seed=st.integers(0, 2**31 - 1))
+def test_roundtrip(bits, n, seed):
+    r = np.random.default_rng(seed)
+    codes = r.integers(0, 1 << bits, size=n).astype(np.uint8)
+    buf = pack_bits(codes, bits)
+    assert len(buf) == packed_nbytes(n, bits)
+    out = unpack_bits(buf, bits, n)
+    assert np.array_equal(codes, out)
+
+
+def test_3bit_density():
+    # 8 three-bit codes must fit exactly 3 bytes
+    assert packed_nbytes(8, 3) == 3
+    assert packed_nbytes(9, 3) == 4
+
+
+def test_out_of_range_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        pack_bits(np.array([4], np.uint8), 2)

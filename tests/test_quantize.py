@@ -1,0 +1,110 @@
+"""Quantization unit + property tests (paper §4.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (
+    PAPER_DEFAULTS,
+    adaptive_quantize,
+    dequantize,
+    kmeans_block_quantize,
+    kmeans_clustered_quantize,
+    kmeans_dequantize,
+    kmeans_quantize,
+    mean_l2_loss,
+    quantize,
+    uniform_quantize,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def skewed_rows(rows=128, dim=64, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray((r.normal(size=(rows, dim)) *
+                        r.gamma(1.0, 1.0, size=(rows, 1))).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_uniform_roundtrip_within_step(bits):
+    x = skewed_rows()
+    q = uniform_quantize(x, bits, symmetric=False)
+    deq = dequantize(q)
+    step = np.asarray(q.scale)[:, None]
+    assert np.all(np.abs(np.asarray(x) - np.asarray(deq)) <= step * 0.5 + 1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_asym_beats_sym_on_skewed(bits):
+    x = skewed_rows() + 0.5  # shift → asymmetric distribution
+    ls = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits, True))))
+    la = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits, False))))
+    assert la <= ls + 1e-6
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_adaptive_never_worse_than_naive(bits):
+    """§4.2.3: the greedy search keeps the best (min,max) seen, which
+    includes the naive full range — adaptive ℓ2 ≤ naive asymmetric ℓ2."""
+    x = skewed_rows()
+    naive = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits, False))))
+    ad = float(mean_l2_loss(x, dequantize(adaptive_quantize(x, bits, 25, 0.5))))
+    assert ad <= naive + 1e-6
+
+
+def test_paper_orderings_fig5():
+    """Qualitative Fig. 5 orderings at 3 bits: per-vector kmeans ≈ adaptive <
+    naive asym < sym; contiguous-block kmeans worse than uniform."""
+    x = skewed_rows(256, 64)
+    bits = 3
+    l_sym = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits, True))))
+    l_asym = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits, False))))
+    l_ad = float(mean_l2_loss(x, dequantize(adaptive_quantize(x, bits, 25, 0.2))))
+    l_km = float(mean_l2_loss(x, kmeans_dequantize(kmeans_quantize(x, bits))))
+    l_blk = float(mean_l2_loss(x, kmeans_dequantize(
+        kmeans_block_quantize(x, bits, n_blocks=8))))
+    l_clu = float(mean_l2_loss(x, kmeans_dequantize(
+        kmeans_clustered_quantize(x, bits, n_blocks=8))))
+    assert l_asym < l_sym
+    assert l_ad < l_asym
+    assert abs(l_km - l_ad) / l_ad < 0.25       # adaptive ≈ per-vector kmeans
+    assert l_blk > l_asym                        # contiguous blocks lose
+    assert l_clu < l_blk                         # 2-tier better than contiguous
+
+
+def test_constant_rows_are_exact():
+    x = jnp.ones((8, 16)) * 3.25
+    for bits in (2, 4, 8):
+        deq = dequantize(uniform_quantize(x, bits))
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(x), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4, 8]),
+       rows=st.integers(1, 32), dim=st.integers(2, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_dequant_bounded(bits, rows, dim, seed):
+    """Property: dequantized values stay within the row's [min, max] hull and
+    codes stay within [0, 2^bits)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(rows, dim)).astype(np.float32) * 10)
+    q = quantize(x, PAPER_DEFAULTS[bits])
+    assert int(np.asarray(q.codes).max()) < (1 << bits)
+    deq = np.asarray(dequantize(q))
+    lo = np.asarray(x).min(axis=1, keepdims=True) - 1e-4
+    hi = np.asarray(x).max(axis=1, keepdims=True) + 1e-4
+    assert np.all(deq >= lo) and np.all(deq <= hi)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_property_error_shrinks_with_bits(bits, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(16, 32)).astype(np.float32))
+    if bits == 8:
+        return
+    lo = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits))))
+    hi = float(mean_l2_loss(x, dequantize(uniform_quantize(x, bits + 1))))
+    assert hi <= lo + 1e-6

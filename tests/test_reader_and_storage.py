@@ -1,0 +1,73 @@
+"""Reader-tier protocol (§3.1) + object-store tests."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.reader_protocol import ReaderLease, ReaderState
+from repro.core.storage import InMemoryStore, LocalFSStore, ThrottledStore, CheckpointCancelled
+from repro.data.reader import DataReader
+
+
+def batch_fn(i):
+    return {"x": np.full((4,), i, dtype=np.int32)}
+
+
+def test_reader_exact_n_protocol():
+    """Reader must deliver exactly `interval` batches then hold — zero
+    in-flight batches at the checkpoint boundary."""
+    lease = ReaderLease(interval_batches=5)
+    reader = DataReader(batch_fn, lease=lease, prefetch=2)
+    for i in range(5):
+        b = reader.next()
+        assert b["x"][0] == i
+    deadline = time.monotonic() + 2.0
+    while reader.in_flight() != 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert reader.in_flight() == 0
+    st = reader.checkpoint_state()
+    assert st.next_batch == 5
+    lease.renew()
+    assert reader.next()["x"][0] == 5
+    reader.close()
+
+
+def test_reader_restore_replays_stream():
+    lease = ReaderLease(1000)
+    r1 = DataReader(batch_fn, lease=lease)
+    seen = [r1.next()["x"][0] for _ in range(7)]
+    st = r1.checkpoint_state()
+    r1.close()
+    r2 = DataReader(batch_fn, lease=ReaderLease(1000), state=ReaderState(**st.to_dict()))
+    resumed = [r2.next()["x"][0] for _ in range(3)]
+    assert resumed == [7, 8, 9]
+    r2.close()
+
+
+def test_localfs_store_atomic(tmp_path):
+    store = LocalFSStore(str(tmp_path))
+    store.put("a/b/c.bin", b"hello")
+    assert store.get("a/b/c.bin") == b"hello"
+    assert list(store.list("a/")) == ["a/b/c.bin"]
+    assert store.size("a/b/c.bin") == 5
+    assert store.counters.bytes_written == 5
+    store.delete("a/b/c.bin")
+    assert not store.exists("a/b/c.bin")
+    with pytest.raises(ValueError):
+        store.put("../escape", b"x")
+
+
+def test_throttled_store_rate_and_cancel():
+    base = InMemoryStore()
+    evt = threading.Event()
+    store = ThrottledStore(base, write_bytes_per_sec=10_000, cancel_event=evt)
+    t0 = time.monotonic()
+    store.put("k", b"x" * 2000)  # 0.2 s at 10 kB/s
+    assert time.monotonic() - t0 >= 0.15
+    evt.set()
+    with pytest.raises(CheckpointCancelled):
+        store.put("k2", b"x" * 5000)
+    assert not base.exists("k2")
