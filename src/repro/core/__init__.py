@@ -2,6 +2,7 @@
 
 from .bitwidth import BitwidthController, expected_failures, select_bits
 from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
+from .pipeline import PipelineStats, WritePipeline
 from .incremental import (
     ConsecutiveIncrement,
     FullOnly,

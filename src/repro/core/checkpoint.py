@@ -4,22 +4,33 @@ Orchestrates the paper's three-stage workflow (§3.4):
 
   1. in-memory snapshot (``repro.core.snapshot`` — the only training stall)
   2. build an optimized checkpoint: incremental-policy row selection (§4.1)
-     + row-wise quantization (§4.2), chunk by chunk
-  3. write to the object store, then atomically commit the manifest
+     + row-wise quantization (§4.2), batched per table through the
+     ``kernels/adaptive_quant`` wrapper (Pallas on TPU, jnp ref elsewhere)
+  3. write to the object store through a bounded encode→write pipeline
+     (``repro.core.pipeline``), then atomically commit the manifest
 
-plus recovery (baseline + increment replay, with dequantization), retention,
-non-overlapping write scheduling with cancellation (straggler mitigation,
-§3.3), and dynamic bit-width fallback (§5.2.1).
+plus recovery (baseline + increment replay, parallel chunk fetch + dequant),
+retention, non-overlapping write scheduling with cancellation (straggler
+mitigation, §3.3), and dynamic bit-width fallback (§5.2.1).
+
+Write-path threading model (see docs/write_path.md):
+
+  trainer thread ──save()──▶ writer thread (quantize tables, feed pipeline)
+                                  │ submit chunks, bounded window
+                                  ├──▶ N encode workers (pack bits, layout,
+                                  │        checksum — CPU)
+                                  └──▶ M upload workers (store.put — IO)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 import traceback
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +38,7 @@ from . import manifest as mf
 from . import packing
 from .bitwidth import BitwidthController
 from .incremental import IncrementalPolicy, make_policy
+from .pipeline import WritePipeline
 from .quantize import (
     PAPER_DEFAULTS,
     QuantConfig,
@@ -35,7 +47,9 @@ from .quantize import (
     quantize,
 )
 from .snapshot import Snapshot
-from .storage import CheckpointCancelled, ObjectStore
+from .storage import CheckpointCancelled, ObjectStore, run_parallel
+
+META_DTYPE = np.float16  # fp16 scale/zero metadata (halves per-row overhead)
 
 
 @dataclasses.dataclass
@@ -52,6 +66,15 @@ class CheckpointConfig:
     write_deadline_s: Optional[float] = None
     aux_bits: Optional[int] = None         # beyond-paper: quantize 1-D f32 row
                                            # aux (AdaGrad acc) per chunk (8-bit)
+    # ---- write/restore engine (docs/write_path.md) ----
+    pipeline: bool = True                  # False → window of 1 (serial order)
+    encode_workers: int = 2                # chunk encode (pack/checksum) threads
+    write_workers: int = 4                 # store.put threads
+    max_inflight_chunks: Optional[int] = None  # encoded-payload window bound
+    quant_batch_rows: Optional[int] = None     # rows per quant dispatch
+                                               # (default 8 × chunk_rows)
+    restore_workers: int = 4               # parallel chunk fetch + dequant
+    quant_impl: str = "auto"               # kernels/adaptive_quant impl knob
 
 
 @dataclasses.dataclass
@@ -59,9 +82,13 @@ class SaveResult:
     step: int
     kind: str
     nbytes: int
+    # build/write are BUSY times summed across workers (quantize + encode
+    # threads / upload threads); with parallel workers they can exceed the
+    # save's wall time. pipeline_stats carries wall_s + per-stage occupancy.
     build_time_s: float
     write_time_s: float
     cancelled: bool = False
+    pipeline_stats: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -173,68 +200,142 @@ class CheckNRunManager:
             return self.bitwidth.current_config()
         return self.config.quant
 
+    # ----------------------------------------------------- batch quantization
+    _adaptive_quant_op = None  # class-level cache for the lazy kernel import
+
+    @classmethod
+    def _kernel_adaptive_quant(cls):
+        """Lazy import: pulls in the kernels package (and its model deps)
+        only when an adaptive config is actually used."""
+        if cls._adaptive_quant_op is None:
+            try:
+                from ..kernels.adaptive_quant import adaptive_quant
+                cls._adaptive_quant_op = adaptive_quant
+            except ImportError:
+                # missing optional dep in this environment → jnp fallback;
+                # real kernel bugs (anything else) must surface, not be
+                # silently masked by the per-table numpy path
+                cls._adaptive_quant_op = False
+        return cls._adaptive_quant_op or None
+
+    def _quantize_selection(self, tab: np.ndarray, sel: np.ndarray,
+                            qcfg: Optional[QuantConfig], contiguous: bool):
+        """Quantize one batch of selected rows in a single call (one kernel
+        dispatch + one device→host copy per quant batch, instead of one per
+        chunk). Returns (codes u8, scale f32, zero f32) or None."""
+        if qcfg is None or len(sel) == 0:
+            return None
+        if contiguous:  # full-checkpoint batches are ascending ranges
+            rows_arr = tab[int(sel[0]):int(sel[-1]) + 1]
+        else:
+            rows_arr = tab[sel]
+        q: Optional[Quantized] = None
+        if qcfg.method == "adaptive":
+            op = self._kernel_adaptive_quant()
+            if op is not None:
+                import jax.numpy as jnp
+                q = op(jnp.asarray(rows_arr, dtype=jnp.float32),
+                       bits=qcfg.bits, num_bins=qcfg.num_bins,
+                       ratio=qcfg.ratio, impl=self.config.quant_impl)
+        if q is None:
+            q = quantize(rows_arr, qcfg)
+        return (np.asarray(q.codes), np.asarray(q.scale, dtype=np.float32),
+                np.asarray(q.zero, dtype=np.float32))
+
+    # ------------------------------------------------------------- the write
     def _write(self, snap: Snapshot, cum, unc, cancel: threading.Event) -> SaveResult:
         t_start = time.monotonic()
         step = snap.step
         decision = self.policy.decide(step)
         qcfg = self._quant_config()
         qcfg = qcfg.resolve() if qcfg is not None else None
+        cfg = self.config
 
+        deadline = (time.monotonic() + cfg.write_deadline_s
+                    if cfg.write_deadline_s else None)
+        if cfg.pipeline:
+            pipe = WritePipeline(encode_workers=cfg.encode_workers,
+                                 write_workers=cfg.write_workers,
+                                 max_inflight=cfg.max_inflight_chunks,
+                                 cancel=cancel, deadline=deadline)
+        else:  # window of 1 → chunks encode and write strictly one at a time
+            pipe = WritePipeline(encode_workers=1, write_workers=1,
+                                 max_inflight=1, cancel=cancel,
+                                 deadline=deadline)
+
+        quant_s = 0.0
+        table_futs: Dict[str, List[Future]] = {}
+        table_shape: Dict[str, Tuple[int, int, str, Dict[str, np.ndarray]]] = {}
+        dense_futs: Dict[str, Future] = {}
+        try:
+            for name, tab in snap.tables.items():
+                rows, dim = tab.shape
+                sel = self._select_rows(decision, name, rows, cum, unc)
+                aux = snap.row_state.get(name, {})
+                full = decision == "full"
+                # Stage 0, writer thread: batched quantization, a few chunks
+                # per kernel dispatch — bounds host memory to O(quant batch)
+                # while amortizing dispatch + device→host copies. Overlaps
+                # with encode/write of previously submitted chunks.
+                qbatch = cfg.quant_batch_rows or 8 * cfg.chunk_rows
+                qbatch = max(cfg.chunk_rows,
+                             qbatch // cfg.chunk_rows * cfg.chunk_rows)
+                futs = []
+                for qlo in range(0, len(sel), qbatch):
+                    bsel = sel[qlo: qlo + qbatch]
+                    t0 = time.monotonic()
+                    qenc = self._quantize_selection(tab, bsel, qcfg,
+                                                    contiguous=full)
+                    quant_s += time.monotonic() - t0
+                    for blo in range(0, len(bsel), cfg.chunk_rows):
+                        bhi = min(blo + cfg.chunk_rows, len(bsel))
+                        idx = bsel[blo:bhi]
+                        q_slice = (None if qenc is None else
+                                   (qenc[0][blo:bhi], qenc[1][blo:bhi],
+                                    qenc[2][blo:bhi]))
+                        key = (f"{mf.chunk_prefix(step)}{name}/"
+                               f"{(qlo + blo) // cfg.chunk_rows:06d}.bin")
+                        encode_fn = functools.partial(
+                            self._encode_chunk_job, key, tab, idx, aux, qcfg,
+                            full, q_slice)
+                        write_fn = functools.partial(self.store.put, key)
+                        futs.append(pipe.submit(encode_fn, write_fn))
+                table_futs[name] = futs
+                table_shape[name] = (rows, dim, str(tab.dtype), aux)
+
+            for key_name, arr in snap.dense.items():
+                key = f"{mf.chunk_prefix(step)}dense/{_sanitize(key_name)}.bin"
+                encode_fn = functools.partial(self._encode_dense_job, key, arr)
+                write_fn = functools.partial(self.store.put, key)
+                dense_futs[key_name] = pipe.submit(encode_fn, write_fn)
+
+            pipe.drain()  # raises the first error / CheckpointCancelled
+        finally:
+            pipe.close()
+
+        # All futures settled successfully — assemble the manifest in
+        # deterministic submission order and commit atomically.
         tables: Dict[str, mf.TableRecord] = {}
         total_bytes = 0
-        build_s = 0.0
-        write_s = 0.0
-
-        deadline = (time.monotonic() + self.config.write_deadline_s
-                    if self.config.write_deadline_s else None)
-
-        for name, tab in snap.tables.items():
-            rows, dim = tab.shape
-            sel = self._select_rows(decision, name, rows, cum, unc)
-            aux = snap.row_state.get(name, {})
-            chunks = []
-            for lo in range(0, len(sel), self.config.chunk_rows):
-                if cancel.is_set() or (deadline and time.monotonic() > deadline):
-                    raise CheckpointCancelled(f"{name}@{step}")
-                idx = sel[lo: lo + self.config.chunk_rows]
-                t0 = time.monotonic()
-                payload, sections = self._encode_chunk(
-                    tab, idx, aux, qcfg, full=(decision == "full"))
-                build_s += time.monotonic() - t0
-                key = f"{mf.chunk_prefix(step)}{name}/{lo // self.config.chunk_rows:06d}.bin"
-                t0 = time.monotonic()
-                self.store.put(key, payload)
-                write_s += time.monotonic() - t0
-                row_range = ([int(idx[0]), int(idx[-1]) + 1]
-                             if decision == "full" and len(idx) else None)
-                chunks.append(mf.ChunkRecord(
-                    key=key, n_rows=int(len(idx)), nbytes=len(payload),
-                    crc32=ObjectStore.checksum(payload), sections=sections,
-                    row_range=row_range))
-                total_bytes += len(payload)
+        for name, futs in table_futs.items():
+            rows, dim, dtype, aux = table_shape[name]
+            chunks = [f.result() for f in futs]
+            total_bytes += sum(c.nbytes for c in chunks)
             tables[name] = mf.TableRecord(
-                rows=rows, dim=dim, dtype=str(tab.dtype),
+                rows=rows, dim=dim, dtype=dtype,
                 bits=qcfg.bits if qcfg else None,
                 method=qcfg.method if qcfg else None,
                 row_state={a: str(v.dtype) for a, v in aux.items()},
-                chunks=chunks)
-
+                chunks=chunks,
+                meta_dtype=str(np.dtype(META_DTYPE)) if qcfg else None)
         dense: Dict[str, mf.DenseRecord] = {}
-        for key_name, arr in snap.dense.items():
-            if cancel.is_set():
-                raise CheckpointCancelled(f"dense@{step}")
-            data = np.ascontiguousarray(arr).tobytes()
-            key = f"{mf.chunk_prefix(step)}dense/{_sanitize(key_name)}.bin"
-            t0 = time.monotonic()
-            self.store.put(key, data)
-            write_s += time.monotonic() - t0
-            dense[key_name] = mf.DenseRecord(
-                key=key, shape=list(arr.shape), dtype=str(arr.dtype),
-                nbytes=len(data), crc32=ObjectStore.checksum(data))
-            total_bytes += len(data)
+        for key_name, fut in dense_futs.items():
+            dense[key_name] = fut.result()
+            total_bytes += dense[key_name].nbytes
 
         prev = mf.latest_step(self.store)
         base = (step if decision == "full" else self.policy.state.baseline_step)
+        stats = pipe.stats
         man = mf.Manifest(
             step=step, kind=decision, base_step=base,
             prev_step=prev, quant=(dataclasses.asdict(qcfg) if qcfg else None),
@@ -253,15 +354,46 @@ class CheckNRunManager:
                 self._cum_touched = {k: np.zeros_like(v) for k, v in self._cum_touched.items()}
             self._uncommitted = {k: np.zeros_like(v) for k, v in self._uncommitted.items()}
         mf.apply_retention(self.store, self.config.keep_latest, self.config.ttl_days)
-        return SaveResult(step=step, kind=decision, nbytes=total_bytes,
-                          build_time_s=build_s, write_time_s=write_s)
+        return SaveResult(
+            step=step, kind=decision, nbytes=total_bytes,
+            build_time_s=quant_s + stats.encode_busy_s,
+            write_time_s=stats.write_busy_s,
+            pipeline_stats=dict(
+                items=stats.items, payload_bytes=stats.payload_bytes,
+                encode_busy_s=stats.encode_busy_s,
+                write_busy_s=stats.write_busy_s,
+                quantize_s=quant_s, wall_s=stats.wall_s,
+                occupancy=stats.occupancy(pipe.encode_workers,
+                                          pipe.write_workers)))
+
+    # ---------------------------------------------------------- encode stage
+    def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, q_slice):
+        payload, sections = self._encode_chunk(tab, idx, aux, qcfg, full,
+                                               q_slice)
+        row_range = ([int(idx[0]), int(idx[-1]) + 1]
+                     if full and len(idx) else None)
+        rec = mf.ChunkRecord(
+            key=key, n_rows=int(len(idx)), nbytes=len(payload),
+            crc32=ObjectStore.checksum(payload), sections=sections,
+            row_range=row_range)
+        return payload, rec
+
+    def _encode_dense_job(self, key: str, arr: np.ndarray):
+        data = np.ascontiguousarray(arr).tobytes()
+        rec = mf.DenseRecord(
+            key=key, shape=list(arr.shape), dtype=str(arr.dtype),
+            nbytes=len(data), crc32=ObjectStore.checksum(data))
+        return data, rec
 
     def _encode_chunk(self, tab: np.ndarray, idx: np.ndarray,
                       aux: Dict[str, np.ndarray], qcfg: Optional[QuantConfig],
-                      full: bool):
+                      full: bool, q_slice=None):
         """Serialize one chunk of rows: [indices?][scale][zero][codes][aux...]
-        (full-checkpoint chunks are contiguous → range-encoded, no indices)."""
-        rows = tab[idx]
+        (full-checkpoint chunks are contiguous → range-encoded, no indices).
+
+        ``q_slice``: this chunk's (codes, scale, zero) views into the
+        table-level batched quantization; when None the chunk quantizes
+        itself (compat path)."""
         parts = []
         sections: Dict[str, list] = {}
         off = 0
@@ -275,25 +407,30 @@ class CheckNRunManager:
         if not full:
             add("indices", np.ascontiguousarray(idx, dtype=np.uint32).tobytes())
         if qcfg is not None and len(idx):
-            q: Quantized = quantize(rows, qcfg)
+            if q_slice is None:
+                q: Quantized = quantize(tab[idx], qcfg)
+                codes, scale, zero = (np.asarray(q.codes),
+                                      np.asarray(q.scale), np.asarray(q.zero))
+            else:
+                codes, scale, zero = q_slice
             # fp16 quantization metadata (beyond-paper: the paper flags its
             # metadata structure as unoptimized; fp16 scale/zero costs <1e-3
             # relative dequant error and halves the per-row overhead)
-            add("scale", np.asarray(q.scale, dtype=np.float16).tobytes())
-            add("zero", np.asarray(q.zero, dtype=np.float16).tobytes())
-            add("codes", packing.pack_bits(np.asarray(q.codes), qcfg.bits))
+            add("scale", np.asarray(scale, dtype=META_DTYPE).tobytes())
+            add("zero", np.asarray(zero, dtype=META_DTYPE).tobytes())
+            add("codes", packing.pack_bits(codes, qcfg.bits))
         else:
-            add("values", np.ascontiguousarray(rows, dtype=np.float32).tobytes())
+            add("values", np.ascontiguousarray(tab[idx], dtype=np.float32).tobytes())
         for a_name, a_arr in aux.items():
             vals = a_arr[idx]
             if (self.config.aux_bits == 8 and vals.ndim == 1
                     and vals.dtype == np.float32 and len(idx)):
                 # per-chunk 8-bit asymmetric: [f32 lo][f32 hi][u8 codes]
                 lo, hi = float(vals.min()), float(vals.max())
-                scale = (hi - lo) / 255.0 or 1.0
-                codes = np.clip(np.round((vals - lo) / scale), 0, 255).astype(np.uint8)
+                scale8 = (hi - lo) / 255.0 or 1.0
+                codes8 = np.clip(np.round((vals - lo) / scale8), 0, 255).astype(np.uint8)
                 add(f"aux8:{a_name}", np.array([lo, hi], np.float32).tobytes()
-                    + codes.tobytes())
+                    + codes8.tobytes())
             else:
                 add(f"aux:{a_name}", np.ascontiguousarray(vals).tobytes())
         return b"".join(parts), sections
@@ -309,7 +446,7 @@ class CheckNRunManager:
 
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
-        for man in chain:
+        for man in chain:  # chain order matters: later manifests overwrite
             for name, rec in man.tables.items():
                 if name not in tables:
                     tables[name] = np.zeros((rec.rows, rec.dim), dtype=np.float32)
@@ -317,8 +454,10 @@ class CheckNRunManager:
                 self._apply_table(tables[name], row_state[name], rec, man)
         final = chain[-1]
         dense = {}
-        for key_name, rec in final.dense.items():
-            data = store.get(rec.key)
+        dense_keys = [rec.key for rec in final.dense.values()]
+        dense_blobs = store.get_many(dense_keys,
+                                     max_workers=self.config.restore_workers)
+        for (key_name, rec), data in zip(final.dense.items(), dense_blobs):
             if ObjectStore.checksum(data) != rec.crc32:
                 raise IOError(f"checksum mismatch for {rec.key}")
             dense[key_name] = np.frombuffer(data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
@@ -335,55 +474,70 @@ class CheckNRunManager:
 
     def _apply_table(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
                      rec: mf.TableRecord, man: mf.Manifest) -> None:
+        """Fetch + decode + scatter one manifest's chunks for one table.
+        Chunks within a manifest cover disjoint rows, so they decode and
+        scatter concurrently on ``restore_workers`` threads."""
+        chunks = [ch for ch in rec.chunks if ch.n_rows > 0]
+        if not chunks:
+            return
+        aux_lock = threading.Lock()
+        run_parallel([functools.partial(self._apply_chunk, out, aux_out,
+                                        aux_lock, rec, ch) for ch in chunks],
+                     self.config.restore_workers, "cnr-restore")
+
+    def _apply_chunk(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
+                     aux_lock: threading.Lock, rec: mf.TableRecord,
+                     ch: mf.ChunkRecord) -> None:
         dim = rec.dim
-        for ch in rec.chunks:
-            data = self.store.get(ch.key)
-            if ObjectStore.checksum(data) != ch.crc32:
-                raise IOError(f"checksum mismatch for {ch.key}")
-            if ch.n_rows == 0:
-                continue
-            if "indices" in ch.sections:
-                o, n = ch.sections["indices"]
-                idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
-            else:
-                lo, hi = ch.row_range
-                idx = np.arange(lo, hi, dtype=np.int64)
-            if "values" in ch.sections:
-                o, n = ch.sections["values"]
-                vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
-            else:
-                o, n = ch.sections["scale"]
+        data = self.store.get(ch.key)
+        if ObjectStore.checksum(data) != ch.crc32:
+            raise IOError(f"checksum mismatch for {ch.key}")
+        if "indices" in ch.sections:
+            o, n = ch.sections["indices"]
+            idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
+        else:
+            lo, hi = ch.row_range
+            idx = np.arange(lo, hi, dtype=np.int64)
+        if "values" in ch.sections:
+            o, n = ch.sections["values"]
+            vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
+        else:
+            o, n = ch.sections["scale"]
+            if rec.meta_dtype is not None:
+                meta_dt = np.dtype(rec.meta_dtype)
+            else:  # pre-meta_dtype manifests: sniff fp16 by section length
                 meta_dt = np.float16 if n == 2 * ch.n_rows else np.float32
-                scale = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
-                o, n = ch.sections["zero"]
-                zero = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
-                o, n = ch.sections["codes"]
-                codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
-                q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
-                vals = np.asarray(dequantize(q))
-            out[idx] = vals
-            for a_name, a_dt in rec.row_state.items():
-                sec8 = ch.sections.get(f"aux8:{a_name}")
-                sec = ch.sections.get(f"aux:{a_name}")
-                if sec8 is not None:
-                    o, n = sec8
-                    lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
-                    codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
-                    a_vals = (codes.astype(np.float32) * ((hi - lo) / 255.0 or 1.0)
-                              + lo)
-                elif sec is None:
-                    continue
-                else:
-                    o, n = sec
-                    a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
-                width = a_vals.size // max(ch.n_rows, 1)
+            scale = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+            o, n = ch.sections["zero"]
+            zero = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+            o, n = ch.sections["codes"]
+            codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
+            q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
+            vals = np.asarray(dequantize(q))
+        out[idx] = vals
+        for a_name, a_dt in rec.row_state.items():
+            sec8 = ch.sections.get(f"aux8:{a_name}")
+            sec = ch.sections.get(f"aux:{a_name}")
+            if sec8 is not None:
+                o, n = sec8
+                lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
+                codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
+                a_vals = (codes.astype(np.float32) * ((hi - lo) / 255.0 or 1.0)
+                          + lo)
+            elif sec is None:
+                continue
+            else:
+                o, n = sec
+                a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
+            width = a_vals.size // max(ch.n_rows, 1)
+            with aux_lock:
                 if a_name not in aux_out:
                     shape = (rec.rows,) if width == 1 else (rec.rows, width)
                     aux_out[a_name] = np.zeros(shape, dtype=np.dtype(a_dt))
-                if width == 1:
-                    aux_out[a_name][idx] = a_vals
-                else:
-                    aux_out[a_name][idx] = a_vals.reshape(-1, width)
+            if width == 1:
+                aux_out[a_name][idx] = a_vals
+            else:
+                aux_out[a_name][idx] = a_vals.reshape(-1, width)
 
 
 def _sanitize(key: str) -> str:

@@ -50,6 +50,9 @@ class TableRecord:
     method: Optional[str]
     row_state: Dict[str, str]  # aux name -> dtype (per-row optimizer state)
     chunks: List[ChunkRecord]
+    # dtype of the per-row scale/zero sections. Old manifests omit it; the
+    # reader then falls back to sniffing the section length (fp16 vs fp32).
+    meta_dtype: Optional[str] = None
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

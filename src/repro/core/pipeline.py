@@ -1,0 +1,196 @@
+"""Bounded two-stage encode→write pipeline for checkpoint chunks (§3.4).
+
+The paper's checkpoint creation is a pipeline, not a serial loop: chunk
+encoding (quantization metadata layout, bit packing, checksumming — CPU
+work) must overlap chunk uploads (storage/network-bound waiting). This
+module provides the stage executor the :class:`~repro.core.checkpoint.
+CheckNRunManager` drives:
+
+* N encode workers and M write workers, fed through a bounded in-flight
+  window (a semaphore) so at most ``max_inflight`` encoded payloads are
+  ever resident — memory stays bounded no matter how many chunks a table
+  produces.
+* Per-item futures settle in submission order on :meth:`drain`, so the
+  manifest chunk order is deterministic regardless of completion order.
+* Cancellation points before each stage: a set cancel event (or an expired
+  deadline) aborts promptly with :class:`CheckpointCancelled`; the caller
+  never commits a manifest for an aborted pipeline.
+* A crash in any worker is recorded, unblocks all waiters (no hang), and
+  resurfaces as that item's Future exception and from :meth:`drain`.
+
+Busy-time accounting per stage feeds the pipeline-occupancy metric in
+``benchmarks/write_path.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, List, Optional, Tuple
+
+from .storage import CheckpointCancelled
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    items: int = 0
+    payload_bytes: int = 0
+    encode_busy_s: float = 0.0
+    write_busy_s: float = 0.0
+    wall_s: float = 0.0
+
+    def occupancy(self, encode_workers: int, write_workers: int) -> dict:
+        wall = max(self.wall_s, 1e-9)
+        return {
+            "encode": self.encode_busy_s / (wall * max(encode_workers, 1)),
+            "write": self.write_busy_s / (wall * max(write_workers, 1)),
+        }
+
+
+class _Item:
+    __slots__ = ("encode_fn", "write_fn", "future", "payload", "result")
+
+    def __init__(self, encode_fn, write_fn):
+        self.encode_fn = encode_fn
+        self.write_fn = write_fn
+        self.future: Future = Future()
+        self.payload: Optional[bytes] = None
+        self.result: Any = None
+
+
+class WritePipeline:
+    """Bounded encode→write executor. One instance per checkpoint write."""
+
+    def __init__(self, encode_workers: int = 2, write_workers: int = 4,
+                 max_inflight: Optional[int] = None,
+                 cancel: Optional[threading.Event] = None,
+                 deadline: Optional[float] = None) -> None:
+        self.encode_workers = max(1, encode_workers)
+        self.write_workers = max(1, write_workers)
+        self.max_inflight = max(1, max_inflight if max_inflight is not None
+                                else self.encode_workers + self.write_workers + 4)
+        self.cancel = cancel or threading.Event()
+        self.deadline = deadline
+        self.stats = PipelineStats()
+        self._enc = ThreadPoolExecutor(self.encode_workers,
+                                       thread_name_prefix="cnr-encode")
+        self._wr = ThreadPoolExecutor(self.write_workers,
+                                      thread_name_prefix="cnr-upload")
+        self._sem = threading.Semaphore(self.max_inflight)
+        self._lock = threading.Lock()
+        self._first_error: Optional[BaseException] = None
+        self._items: List[_Item] = []
+        self._t0 = time.monotonic()
+
+    # ------------------------------------------------------------- aborting
+    def _record_error(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._first_error is None:
+                self._first_error = exc
+
+    def _check_abort(self) -> None:
+        """Raise if the pipeline should stop feeding work. The root error is
+        re-raised as itself so a worker crash is never misreported as a
+        cancellation by callers that catch CheckpointCancelled."""
+        with self._lock:
+            err = self._first_error
+        if err is not None:
+            raise err
+        if self.cancel.is_set():
+            raise CheckpointCancelled("cancelled")
+        if self.deadline is not None and time.monotonic() > self.deadline:
+            raise CheckpointCancelled("write deadline exceeded")
+
+    # ------------------------------------------------------------ submission
+    def submit(self, encode_fn: Callable[[], Tuple[bytes, Any]],
+               write_fn: Callable[[bytes], None]) -> Future:
+        """Queue one chunk. ``encode_fn() -> (payload, result)`` runs on an
+        encode worker; ``write_fn(payload)`` on a write worker; the returned
+        Future resolves to ``result`` once the payload is durably put."""
+        # Bounded window; poll so cancellation/failure interrupts the wait.
+        while not self._sem.acquire(timeout=0.05):
+            self._check_abort()
+        try:
+            self._check_abort()
+            item = _Item(encode_fn, write_fn)
+            self._items.append(item)
+            self._enc.submit(self._encode_task, item)
+            return item.future
+        except BaseException:
+            self._sem.release()
+            raise
+
+    def _settle(self, item: _Item, exc: Optional[BaseException]) -> None:
+        item.payload = None
+        self._sem.release()
+        if exc is not None:
+            self._record_error(exc)
+            item.future.set_exception(exc)
+        else:
+            item.future.set_result(item.result)
+
+    def _encode_task(self, item: _Item) -> None:
+        try:
+            self._check_abort()
+            t0 = time.monotonic()
+            item.payload, item.result = item.encode_fn()
+            dt = time.monotonic() - t0
+            with self._lock:
+                self.stats.encode_busy_s += dt
+                self.stats.payload_bytes += len(item.payload)
+        except BaseException as e:
+            self._settle(item, e)
+            return
+        try:
+            self._wr.submit(self._write_task, item)
+        except BaseException as e:  # executor torn down
+            self._settle(item, e)
+
+    def _write_task(self, item: _Item) -> None:
+        try:
+            self._check_abort()
+            t0 = time.monotonic()
+            item.write_fn(item.payload)
+            with self._lock:
+                self.stats.write_busy_s += time.monotonic() - t0
+                self.stats.items += 1
+        except BaseException as e:
+            self._settle(item, e)
+            return
+        self._settle(item, None)
+
+    # --------------------------------------------------------------- results
+    def drain(self) -> List[Any]:
+        """Block until every submitted item settles; return results in
+        submission order, or raise the first error (by submission order)."""
+        results = []
+        first_exc: Optional[BaseException] = None
+        for item in self._items:
+            try:
+                results.append(item.future.result())
+            except BaseException as e:
+                if first_exc is None:
+                    first_exc = e
+        self.stats.wall_s = time.monotonic() - self._t0
+        if first_exc is not None:
+            # Prefer the first error recorded in time: abort-cascade items
+            # settle with a derived CheckpointCancelled, but the root cause
+            # (a worker crash, a genuine cancel) was recorded first.
+            with self._lock:
+                root = self._first_error
+            raise root if root is not None else first_exc
+        return results
+
+    def close(self) -> None:
+        self._enc.shutdown(wait=True)
+        self._wr.shutdown(wait=True)
+        if self.stats.wall_s == 0.0:
+            self.stats.wall_s = time.monotonic() - self._t0
+
+    def __enter__(self) -> "WritePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -18,7 +18,8 @@ import os
 import threading
 import time
 import zlib
-from typing import Dict, Iterable, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 class StoreCounters:
@@ -55,6 +56,23 @@ class StoreCounters:
             )
 
 
+def run_parallel(fns, max_workers: int = 4, name_prefix: str = "par"):
+    """Run thunks on a bounded pool; results in submission order. All
+    in-flight work settles before the first exception (submission order)
+    is re-raised — shared single-use fan-out for multi-key store ops and
+    parallel restore."""
+    if len(fns) <= 1 or max_workers <= 1:
+        return [fn() for fn in fns]
+    with ThreadPoolExecutor(min(max_workers, len(fns)),
+                            thread_name_prefix=name_prefix) as pool:
+        futs = [pool.submit(fn) for fn in fns]
+        errs = [f.exception() for f in futs]
+    for e in errs:
+        if e is not None:
+            raise e
+    return [f.result() for f in futs]
+
+
 class ObjectStore:
     """put/get/delete/list of immutable blobs under string keys."""
 
@@ -81,6 +99,21 @@ class ObjectStore:
 
     def total_bytes(self, prefix: str = "") -> int:
         return sum(self.size(k) for k in self.list(prefix))
+
+    # ------------------------------------------------------- multi-key ops
+    def put_many(self, items: Sequence[Tuple[str, bytes]],
+                 max_workers: int = 4) -> None:
+        """Store several blobs concurrently. Atomicity stays per-key (the
+        manifest commit provides checkpoint-level atomicity); a failed put
+        raises after all in-flight puts settle."""
+        run_parallel([lambda k=k, d=d: self.put(k, d) for k, d in items],
+                     max_workers, "store-put")
+
+    def get_many(self, keys: Sequence[str],
+                 max_workers: int = 4) -> List[bytes]:
+        """Fetch several blobs concurrently; results in ``keys`` order."""
+        return run_parallel([lambda k=k: self.get(k) for k in keys],
+                            max_workers, "store-get")
 
     @staticmethod
     def checksum(data: bytes) -> int:
@@ -180,7 +213,14 @@ class LocalFSStore(ObjectStore):
 
 
 class ThrottledStore(ObjectStore):
-    """Caps write bandwidth (bytes/sec) to emulate remote-storage limits."""
+    """Caps write bandwidth (bytes/sec) to emulate remote-storage limits.
+
+    Concurrent ``put`` calls share ONE link: each reserves a transmission
+    slot on a common timeline, so N parallel writers never exceed the
+    configured aggregate bandwidth. This keeps the pipelined write engine
+    honest — parallelism overlaps encoding with the link, it does not
+    conjure extra bandwidth.
+    """
 
     def __init__(self, inner: ObjectStore, write_bytes_per_sec: float,
                  cancel_event: Optional[threading.Event] = None) -> None:
@@ -189,17 +229,33 @@ class ThrottledStore(ObjectStore):
         self.bw = float(write_bytes_per_sec)
         self.cancel_event = cancel_event or threading.Event()
         self.counters = inner.counters
+        self._link_lock = threading.Lock()
+        self._link_free_at = 0.0
 
     def put(self, key: str, data: bytes) -> None:
-        # Sleep in slices so a cancel (straggler mitigation, §3.3) interrupts.
         delay = len(data) / self.bw
-        deadline = time.monotonic() + delay
-        while True:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                break
-            if self.cancel_event.wait(timeout=min(remaining, 0.05)):
-                raise CheckpointCancelled(key)
+        with self._link_lock:
+            start = max(time.monotonic(), self._link_free_at)
+            end = start + delay
+            self._link_free_at = end
+        try:
+            # Sleep in slices so a cancel (straggler mitigation, §3.3)
+            # interrupts mid-transmission.
+            while True:
+                remaining = end - time.monotonic()
+                if remaining <= 0:
+                    break
+                if self.cancel_event.wait(timeout=min(remaining, 0.05)):
+                    raise CheckpointCancelled(key)
+        except CheckpointCancelled:
+            # Return our unused reservation so the next checkpoint does not
+            # inherit a phantom backlog from cancelled transmissions. Each
+            # put refunds only its own [start, end) slot, so concurrent
+            # cancellations refund correctly in any order.
+            with self._link_lock:
+                unused = max(0.0, end - max(time.monotonic(), start))
+                self._link_free_at -= unused
+            raise
         self.inner.put(key, data)
 
     def get(self, key: str) -> bytes:

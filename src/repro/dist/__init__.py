@@ -1,0 +1,4 @@
+"""Distribution utilities: logical-axis sharding rules + compressed
+collectives. Import submodules directly (``repro.dist.sharding``,
+``repro.dist.collectives``) — this package init stays import-light so the
+core checkpoint path never pays for model/mesh machinery."""

@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules.
+
+Models and cell builders annotate tensors with *logical* axis names
+("batch", "heads", "embed_rows", ...). A :class:`ShardingRules` maps those
+names onto physical mesh axes, gated on divisibility: a logical axis only
+shards if its dimension divides the product of the mapped mesh-axis sizes,
+otherwise it silently stays replicated. That keeps every model runnable on
+a single device (``NO_SHARDING``) and numerically identical under any mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """mesh + {logical axis name -> tuple of mesh axis names}."""
+
+    mesh: Optional[Mesh]
+    axis_map: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- resolution
+    def axes_for(self, name: Optional[str], size: Optional[int] = None):
+        """Mesh axes for logical axis ``name``, or None if it cannot shard
+        (no mesh, unmapped name, or ``size`` not divisible)."""
+        if self.mesh is None or name is None:
+            return None
+        axes = tuple(a for a in self.axis_map.get(name, ())
+                     if a in self.mesh.shape)
+        if not axes:
+            return None
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        if size is not None and (size == 0 or size % n != 0):
+            return None
+        return axes
+
+    def pspec(self, *logical, dims: Optional[Tuple[int, ...]] = None) -> P:
+        """PartitionSpec for a tensor whose dims carry the given logical
+        names (None entries stay replicated). Each mesh axis is used at most
+        once — later duplicates are dropped, keeping the spec valid even
+        when two logical axes map to the same mesh axis."""
+        entries = []
+        used = set()
+        for i, name in enumerate(logical):
+            size = dims[i] if dims is not None and i < len(dims) else None
+            axes = self.axes_for(name, size)
+            if axes:
+                axes = tuple(a for a in axes if a not in used)
+            if axes:
+                used.update(axes)
+                entries.append(axes if len(axes) > 1 else axes[0])
+            else:
+                entries.append(None)
+        if dims is not None and len(entries) < len(dims):
+            entries.extend([None] * (len(dims) - len(entries)))
+        return P(*entries)
+
+    def shard(self, x: jax.Array, *logical) -> jax.Array:
+        """Constrain ``x`` to the sharding implied by its logical axes.
+        No-op without a mesh, and degrades to identity where a constraint
+        cannot be applied (e.g. inside a shard_map cell)."""
+        if self.mesh is None:
+            return x
+        spec = self.pspec(*logical, dims=x.shape)
+        if all(e is None for e in spec):
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        except Exception:
+            return x
+
+
+NO_SHARDING = ShardingRules(mesh=None, axis_map={})
+
+
+# ---------------------------------------------------------------------------
+# Family rule sets. Mesh axis convention: ("data", "model").
+# ---------------------------------------------------------------------------
+
+
+def lm_rules(mesh: Optional[Mesh], pure_fsdp: bool = False) -> ShardingRules:
+    """Transformer LM rules: batch over data; heads/ff/vocab/experts tensor-
+    parallel over model (or pure-FSDP: only d_model over model)."""
+    if pure_fsdp:
+        amap = {
+            "batch": ("data",),
+            "d_model": ("model",),
+            "embed_rows": ("data", "model"),
+        }
+    else:
+        amap = {
+            "batch": ("data",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "ff": ("model",),
+            "vocab": ("model",),
+            "experts": ("model",),
+            "seq_sp": ("model",),
+            "embed_rows": ("data", "model"),
+        }
+    return ShardingRules(mesh=mesh, axis_map=amap)
+
+
+def recsys_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    """Recommendation-model rules: batch over data, embedding-table rows
+    range-partitioned over the whole mesh, candidate sets over model."""
+    return ShardingRules(mesh=mesh, axis_map={
+        "batch": ("data",),
+        "embed_rows": ("data", "model"),
+        "candidates": ("model",),
+    })
+
+
+def gnn_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    """GNN rules: graph entity dims range-partitioned over the whole mesh."""
+    return ShardingRules(mesh=mesh, axis_map={
+        "batch": ("data",),
+        "nodes": ("data", "model"),
+        "edges": ("data", "model"),
+        "triplets": ("data", "model"),
+        "embed_rows": ("data", "model"),
+    })

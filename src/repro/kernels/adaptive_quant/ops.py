@@ -20,6 +20,10 @@ def _backend_is_tpu() -> bool:
         return False
 
 
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "num_bins", "ratio",
                                              "block_rows", "impl"))
 def adaptive_quant(x: jax.Array, bits: int = 4, num_bins: int = 45,
@@ -28,19 +32,28 @@ def adaptive_quant(x: jax.Array, bits: int = 4, num_bins: int = 45,
     """Row-wise adaptive asymmetric quantization (paper §4.2.3).
 
     impl: "auto" (pallas on TPU, ref otherwise), "pallas", "interpret", "ref".
+
+    Arbitrary row counts are supported: the kernel requires the grid to tile
+    rows exactly, so ragged inputs are zero-padded up to a multiple of the
+    block size here and the outputs sliced back — each row quantizes
+    independently, so padding rows are inert.
     """
     rows, dim = x.shape
     if impl == "auto":
         impl = "pallas" if _backend_is_tpu() else "ref"
-    if impl == "ref":
+    if impl == "ref" or rows == 0:
         codes, scale, zero = adaptive_quant_ref(x, bits=bits, num_bins=num_bins,
                                                 ratio=ratio)
         return Quantized(codes, scale, zero, bits=bits)
     interpret = impl == "interpret"
-    br = min(block_rows, rows)
-    while rows % br:
-        br -= 1
+    br = min(block_rows, _round_up(rows, 8))
+    rows_pad = _round_up(rows, br)
+    xp = x.astype(jnp.float32)
+    if rows_pad != rows:
+        xp = jnp.pad(xp, ((0, rows_pad - rows), (0, 0)))
     codes, scale, zero = adaptive_quant_pallas(
-        x.astype(jnp.float32), bits=bits, num_bins=num_bins, ratio=ratio,
+        xp, bits=bits, num_bins=num_bins, ratio=ratio,
         block_rows=br, interpret=interpret)
+    if rows_pad != rows:
+        codes, scale, zero = codes[:rows], scale[:rows], zero[:rows]
     return Quantized(codes, scale, zero, bits=bits)

@@ -21,6 +21,17 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+
+def _compiler_params(**kwargs):
+    """jax renamed TPUCompilerParams -> CompilerParams across versions."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise RuntimeError(
+            "unsupported jax version: pallas TPU compiler params class "
+            "not found (need CompilerParams or TPUCompilerParams)")
+    return cls(**kwargs)
+
 NEG_INF = float(np.finfo(np.float32).min)
 
 
@@ -102,7 +113,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d_pad), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -199,6 +199,34 @@ def moe_params_init(key, d_model: int, cfg: MoEConfig) -> Dict[str, Any]:
     return p
 
 
+def _ragged_dot_is_fixed() -> bool:
+    """jax <= 0.4.x: ragged_dot's transpose under scan emits a cotangent in
+    preferred_element_type, tripping the add_jaxvals typematch assert when
+    it differs from the operand dtype."""
+    try:
+        major, minor = (int(p) for p in jax.__version__.split(".")[:2])
+    except ValueError:  # pragma: no cover - exotic version strings
+        return False
+    return (major, minor) >= (0, 5)
+
+
+_RAGGED_DOT_MIXED_OK = _ragged_dot_is_fixed()
+
+
+def _ragged_dot_f32(a, w, *, gs, compute_dtype):
+    """ragged_dot with f32 accumulation. On fixed jax versions: operands in
+    compute_dtype with preferred_element_type=f32 (MXU-native). On affected
+    versions the operands are upcast (values already rounded to
+    compute_dtype) so the accumulation dtype matches the operands, dodging
+    the broken transpose while keeping the original numerics."""
+    w = w.astype(compute_dtype)
+    if _RAGGED_DOT_MIXED_OK:
+        return jax.lax.ragged_dot(a, w, gs,
+                                  preferred_element_type=jnp.float32)
+    return jax.lax.ragged_dot(a.astype(jnp.float32), w.astype(jnp.float32),
+                              gs, preferred_element_type=jnp.float32)
+
+
 def _moe_local(xf, ids, weights, w_up, w_gate, w_down, act, compute_dtype):
     """Grouped-GEMM MoE on local tokens: sort-by-expert + lax.ragged_dot —
     the TPU-native (megablox-style) formulation; no capacity, no drops."""
@@ -210,16 +238,14 @@ def _moe_local(xf, ids, weights, w_up, w_gate, w_down, act, compute_dtype):
     tok = order // k
     xs = jnp.take(xf, tok, axis=0).astype(compute_dtype)
     gs = jnp.bincount(flat, length=E).astype(jnp.int32)
-    h = jax.lax.ragged_dot(xs, w_up.astype(compute_dtype), gs,
-                           preferred_element_type=jnp.float32)
+    rdot = functools.partial(_ragged_dot_f32, gs=gs,
+                             compute_dtype=compute_dtype)
+    h = rdot(xs, w_up)
     if w_gate is not None:
-        g = jax.lax.ragged_dot(xs, w_gate.astype(compute_dtype), gs,
-                               preferred_element_type=jnp.float32)
-        h = act(g) * h
+        h = act(rdot(xs, w_gate)) * h
     else:
         h = act(h)
-    y = jax.lax.ragged_dot(h.astype(compute_dtype), w_down.astype(compute_dtype), gs,
-                           preferred_element_type=jnp.float32)
+    y = rdot(h.astype(compute_dtype), w_down)
     wsort = weights.reshape(-1)[order].astype(jnp.float32)
     out = jnp.zeros((n, d), jnp.float32).at[tok].add(y * wsort[:, None])
     return out

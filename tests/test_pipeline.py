@@ -1,0 +1,229 @@
+"""Write-pipeline semantics: bounded window, ordering, cancellation leaves
+no committed manifest, overlap="cancel" preemption, and worker crashes
+surfacing as Future exceptions (never a hang)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckNRunManager,
+    CheckpointConfig,
+    CheckpointCancelled,
+    InMemoryStore,
+    Snapshot,
+    ThrottledStore,
+    WritePipeline,
+)
+from repro.core import manifest as mf
+
+
+def make_snap(step, table, touched_idx=None):
+    R = table.shape[0]
+    t = np.zeros(R, dtype=bool)
+    if touched_idx is not None:
+        t[touched_idx] = True
+    return Snapshot(step=step, tables={"emb": table.copy()},
+                    row_state={"emb": {}}, touched={"emb": t},
+                    dense={}, extra={})
+
+
+# ---------------------------------------------------------------- pipeline
+
+
+def test_pipeline_results_in_submission_order():
+    store = {}
+    pipe = WritePipeline(encode_workers=3, write_workers=3)
+    for i in range(20):
+        delay = 0.01 if i % 2 else 0.0  # odd items encode slower
+        pipe.submit(
+            (lambda i=i, d=delay: (time.sleep(d), (b"p%d" % i, i))[1]),
+            (lambda payload, i=i: store.__setitem__(i, payload)))
+    results = pipe.drain()
+    pipe.close()
+    assert results == list(range(20))
+    assert store == {i: b"p%d" % i for i in range(20)}
+
+
+def test_pipeline_bounded_inflight():
+    peak = [0]
+    live = [0]
+    lock = threading.Lock()
+
+    def encode(i):
+        with lock:
+            live[0] += 1
+            peak[0] = max(peak[0], live[0])
+        time.sleep(0.005)
+        return b"x" * 10, i
+
+    def write(payload):
+        time.sleep(0.005)
+        with lock:
+            live[0] -= 1
+
+    pipe = WritePipeline(encode_workers=2, write_workers=2, max_inflight=3)
+    for i in range(24):
+        pipe.submit(lambda i=i: encode(i), write)
+    pipe.drain()
+    pipe.close()
+    assert peak[0] <= 3
+
+
+def test_encode_crash_surfaces_no_hang():
+    """A crash in an encode worker must resurface promptly from drain() and
+    from the item's Future — and never deadlock the bounded window."""
+    pipe = WritePipeline(encode_workers=2, write_workers=2, max_inflight=2)
+
+    def boom():
+        raise RuntimeError("encode worker crashed")
+
+    futs = []
+    with pytest.raises(RuntimeError, match="encode worker crashed"):
+        for i in range(8):
+            futs.append(pipe.submit(
+                boom if i == 1 else (lambda: (b"ok", "ok")),
+                lambda payload: None))
+        pipe.drain()
+    pipe.close()
+    assert isinstance(futs[1].exception(timeout=5), RuntimeError)
+    # every submitted future settled (no hang)
+    assert all(f.done() for f in futs)
+
+
+def test_write_crash_surfaces_no_hang():
+    pipe = WritePipeline(encode_workers=2, write_workers=2, max_inflight=2)
+
+    def bad_write(payload):
+        raise IOError("store exploded")
+
+    with pytest.raises(IOError, match="store exploded"):
+        for i in range(6):
+            pipe.submit(lambda: (b"ok", "ok"), bad_write)
+        pipe.drain()
+    pipe.close()
+
+
+def test_cancel_mid_pipeline_aborts():
+    cancel = threading.Event()
+    pipe = WritePipeline(encode_workers=2, write_workers=2, max_inflight=2,
+                         cancel=cancel)
+    written = []
+
+    def slow_write(payload):
+        time.sleep(0.02)
+        written.append(payload)
+
+    pipe.submit(lambda: (b"a", 1), slow_write)
+    cancel.set()
+    with pytest.raises(CheckpointCancelled):
+        for i in range(10):
+            pipe.submit(lambda: (b"b", 2), slow_write)
+        pipe.drain()
+    pipe.close()
+
+
+def test_deadline_aborts():
+    pipe = WritePipeline(encode_workers=1, write_workers=1,
+                         deadline=time.monotonic() - 1.0)
+    with pytest.raises(CheckpointCancelled):
+        pipe.submit(lambda: (b"x", 0), lambda p: None)
+        pipe.drain()
+    pipe.close()
+
+
+# ------------------------------------------------- manager-level semantics
+
+
+def test_cancelled_save_commits_no_manifest():
+    """Cancellation mid-pipeline must leave the store without a manifest for
+    that step (chunk blobs may exist; they are unreachable garbage)."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(20000, 32)).astype(np.float32)
+    cancel_evt = threading.Event()
+    slow = ThrottledStore(InMemoryStore(), write_bytes_per_sec=100_000,
+                          cancel_event=cancel_evt)
+    mgr = CheckNRunManager(slow, CheckpointConfig(
+        policy="full_only", quant=None, async_write=True, chunk_rows=1024))
+    mgr._cancel = cancel_evt
+    fut = mgr.save(make_snap(1, table))
+    time.sleep(0.1)
+    cancel_evt.set()
+    res = fut.result()
+    assert res.cancelled
+    assert mf.latest_step(slow) is None
+    mgr.close()
+
+
+def test_overlap_cancel_preempts_inflight_save():
+    """§3.3: with overlap="cancel" a new save preempts the straggler; the
+    next checkpoint still restores exactly."""
+    rng = np.random.default_rng(1)
+    R = 8000
+    table = rng.normal(size=(R, 32)).astype(np.float32)
+    cancel_evt = threading.Event()
+    slow = ThrottledStore(InMemoryStore(), write_bytes_per_sec=50_000,
+                          cancel_event=cancel_evt)
+    mgr = CheckNRunManager(slow, CheckpointConfig(
+        policy="one_shot", quant=None, async_write=True, overlap="cancel",
+        chunk_rows=256))
+    mgr._cancel = cancel_evt
+    f1 = mgr.save(make_snap(1, table, np.arange(R)))
+    time.sleep(0.1)
+    slow.bw = 1e12
+    f2 = mgr.save(make_snap(2, table, np.arange(R)))
+    r1, r2 = f1.result(), f2.result()
+    assert r1.cancelled and not r2.cancelled
+    rs = mgr.restore()
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+    mgr.close()
+
+
+def test_worker_crash_surfaces_on_save_future():
+    """An encode-stage crash must surface as the save Future's exception."""
+    class BrokenStore(InMemoryStore):
+        def put(self, key, data):
+            if "emb" in key:
+                raise RuntimeError("injected store failure")
+            super().put(key, data)
+
+    rng = np.random.default_rng(2)
+    table = rng.normal(size=(2048, 8)).astype(np.float32)
+    mgr = CheckNRunManager(BrokenStore(), CheckpointConfig(
+        policy="full_only", quant=None, async_write=True, chunk_rows=256))
+    fut = mgr.save(make_snap(1, table))
+    with pytest.raises(RuntimeError, match="injected store failure"):
+        fut.result(timeout=30)
+    mgr.close()
+
+
+def test_pipelined_and_serial_payloads_identical():
+    """The pipelined engine must produce byte-identical chunk blobs and an
+    equivalent manifest to the window-of-1 (serial-order) engine."""
+    rng = np.random.default_rng(3)
+    table = rng.normal(size=(5000, 16)).astype(np.float32)
+    acc = np.abs(rng.normal(size=5000)).astype(np.float32)
+
+    def run(pipeline):
+        store = InMemoryStore()
+        mgr = CheckNRunManager(store, CheckpointConfig(
+            policy="full_only", async_write=False, chunk_rows=700,
+            pipeline=pipeline, aux_bits=8))
+        snap = Snapshot(step=1, tables={"emb": table.copy()},
+                        row_state={"emb": {"acc": acc.copy()}},
+                        touched={"emb": np.ones(5000, bool)},
+                        dense={"w": rng.normal(size=(4, 4)).astype(np.float32)},
+                        extra={})
+        # rebuild dense deterministically across runs
+        snap.dense = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
+        mgr.save(snap).result()
+        return store
+
+    s_pipe, s_serial = run(True), run(False)
+    keys_p = [k for k in s_pipe.list("chunks/")]
+    keys_s = [k for k in s_serial.list("chunks/")]
+    assert keys_p == keys_s and len(keys_p) >= 9
+    for k in keys_p:
+        assert s_pipe.get(k) == s_serial.get(k), k

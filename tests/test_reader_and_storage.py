@@ -71,3 +71,36 @@ def test_throttled_store_rate_and_cancel():
     with pytest.raises(CheckpointCancelled):
         store.put("k2", b"x" * 5000)
     assert not base.exists("k2")
+
+
+def test_put_many_get_many_roundtrip():
+    store = InMemoryStore()
+    items = [(f"k/{i:03d}", bytes([i]) * (i + 1)) for i in range(17)]
+    store.put_many(items, max_workers=4)
+    assert store.counters.put_ops == 17
+    got = store.get_many([k for k, _ in items], max_workers=4)
+    assert got == [d for _, d in items]
+
+
+def test_put_many_propagates_errors():
+    class Flaky(InMemoryStore):
+        def put(self, key, data):
+            if key.endswith("7"):
+                raise IOError("transient")
+            super().put(key, data)
+
+    store = Flaky()
+    with pytest.raises(IOError, match="transient"):
+        store.put_many([(f"k{i}", b"x") for i in range(10)], max_workers=3)
+    assert store.exists("k0")  # non-failing puts still landed
+
+
+def test_throttled_store_shares_one_link():
+    """N concurrent puts must share the configured aggregate bandwidth, not
+    multiply it: 4 x 2000 B at 40 kB/s takes >= ~0.2 s total."""
+    store = ThrottledStore(InMemoryStore(), write_bytes_per_sec=40_000)
+    t0 = time.monotonic()
+    store.put_many([(f"k{i}", b"x" * 2000) for i in range(4)], max_workers=4)
+    elapsed = time.monotonic() - t0
+    assert elapsed >= 0.15, elapsed  # serial-equivalent transmission time
+    assert all(store.exists(f"k{i}") for i in range(4))

@@ -62,6 +62,8 @@ def test_lm_flops_formula_vs_hlo_unrolled():
     params = T.init_params(jax.random.key(0), cfg)
     c = jax.jit(fwd_unrolled).lower(params, jnp.zeros((B, S), jnp.int32)) \
         .compile().cost_analysis()
+    if isinstance(c, (list, tuple)):  # older jax returned a per-device list
+        c = c[0]
     hlo_flops = c["flops"]
 
     # analytic fwd matmul flops: 2·P_act·tokens + attention
