@@ -1,6 +1,8 @@
 """End-to-end checkpoint write-path benchmark: serial seed path vs the
-pipelined parallel engine (core/pipeline.py), plus the bit-packing
-microbench. Writes ``BENCH_write_path.json``.
+pipelined parallel engine (core/pipeline.py), the sharded multi-host sweep
+(dist/shard_writer.py — 1/2/4/8 simulated hosts on a shared aggregate link
+vs per-host links), plus the bit-packing microbench. Writes
+``BENCH_write_path.json``.
 
   PYTHONPATH=src python benchmarks/write_path.py [--tiny] [--out PATH]
 
@@ -8,7 +10,7 @@ Reported per mode: wall seconds, end-to-end GB/s over the snapshot bytes,
 encode/write busy split, pipeline occupancy. The serial baseline is a
 faithful replica of the seed manager loop: per-chunk jitted quantization,
 bit-matrix reference packer, one blocking put per chunk on a single thread.
-Restores from both stores must be byte-identical.
+Restores from all stores must be byte-identical.
 """
 
 from __future__ import annotations
@@ -27,6 +29,8 @@ from repro.core import (
     CheckpointConfig,
     InMemoryStore,
     QuantConfig,
+    ThrottledStore,
+    host_link,
     quantize,
 )
 from repro.core import manifest as mf
@@ -35,7 +39,8 @@ from repro.core.snapshot import Snapshot
 from repro.core.storage import ObjectStore
 
 
-def make_workload(tables: int, rows: int, dim: int, seed: int = 0) -> Snapshot:
+def make_workload(tables: int, rows: int, dim: int, seed: int = 0,
+                  dense_dim: int = 512) -> Snapshot:
     rng = np.random.default_rng(seed)
     tabs = {f"emb{i}": (rng.normal(size=(rows, dim))
                         * rng.gamma(1.0, 1.0, (rows, 1))).astype(np.float32)
@@ -43,7 +48,7 @@ def make_workload(tables: int, rows: int, dim: int, seed: int = 0) -> Snapshot:
     row_state = {n: {"acc": np.abs(rng.normal(size=rows)).astype(np.float32)}
                  for n in tabs}
     touched = {n: np.ones(rows, bool) for n in tabs}
-    dense = {"top_mlp/w": rng.normal(size=(512, 512)).astype(np.float32)}
+    dense = {"top_mlp/w": rng.normal(size=(dense_dim, dense_dim)).astype(np.float32)}
     return Snapshot(step=1, tables=tabs, row_state=row_state,
                     touched=touched, dense=dense, extra={})
 
@@ -217,6 +222,89 @@ def bench_end_to_end(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_sharded(args, qcfg: QuantConfig) -> dict:
+    """Sharded multi-host sweep: 1/2/4/8 simulated hosts writing the same
+    snapshot through a throttled store, modelled two ways —
+
+      shared:   all hosts share ONE aggregate link (adding hosts cannot add
+                bandwidth; two-phase commit overhead must stay ~free)
+      per_host: every host gets its own link of the same bandwidth (the
+                paper's decentralized-writer story: bandwidth scales with
+                hosts, wall time ≈ 1/N)
+
+    Every configuration's restore must be byte-identical to the unthrottled
+    single-host restore of the same snapshot.
+    """
+    # embedding-dominated workload (tiny dense): dense params are written by
+    # a single owner host, so a dense-heavy snapshot would serialize on one
+    # link and mask the table-shard scaling the sweep measures
+    snap = make_workload(args.tables, args.rows, args.dim, seed=3,
+                         dense_dim=32)
+
+    # reference: unthrottled single-host write → payload size + restore oracle
+    ref_store = InMemoryStore()
+    ref_mgr = CheckNRunManager(ref_store, CheckpointConfig(
+        policy="full_only", quant=qcfg, async_write=False,
+        chunk_rows=args.chunk_rows))
+    payload = ref_mgr.save(snap).result().nbytes
+    ref = ref_mgr.restore()
+    ref_mgr.close()
+
+    bw = payload / args.shard_target_s  # per-link B/s: 1-host shared ≈ target
+    sweep = []
+    for n in args.num_hosts:
+        # warm the jit caches for this host count's shard shapes so the
+        # timed region measures the link model, not compilation
+        warm_mgr = CheckNRunManager(InMemoryStore(), CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows, num_hosts=n,
+            encode_workers=args.encode_workers,
+            write_workers=args.write_workers))
+        warm_mgr.save(snap).result()
+        warm_mgr.close()
+        row = {"num_hosts": n}
+        for mode in ("shared", "per_host"):
+            store = ThrottledStore(
+                InMemoryStore(), write_bytes_per_sec=bw,
+                num_links=(n if mode == "per_host" else 1),
+                link_of=(host_link if mode == "per_host" else None))
+            mgr = CheckNRunManager(store, CheckpointConfig(
+                policy="full_only", quant=qcfg, async_write=False,
+                chunk_rows=args.chunk_rows, num_hosts=n,
+                encode_workers=args.encode_workers,
+                write_workers=args.write_workers))
+            t0 = time.monotonic()
+            mgr.save(snap).result()
+            wall = time.monotonic() - t0
+            rs = mgr.restore()
+            for name in snap.tables:
+                if not np.array_equal(ref.tables[name], rs.tables[name]):
+                    raise AssertionError(
+                        f"sharded restore mismatch: {name} ({n} hosts, {mode})")
+                if not np.array_equal(ref.row_state[name]["acc"],
+                                      rs.row_state[name]["acc"]):
+                    raise AssertionError(
+                        f"sharded aux mismatch: {name} ({n} hosts, {mode})")
+            for name in snap.dense:  # per-host dense ownership is new here
+                if not np.array_equal(ref.dense[name], rs.dense[name]):
+                    raise AssertionError(
+                        f"sharded dense mismatch: {name} ({n} hosts, {mode})")
+            mgr.close()
+            row[mode] = {"wall_s": round(wall, 4),
+                         "mbps": round(payload / wall / 1e6, 2)}
+        row["per_host_speedup"] = round(
+            row["shared"]["wall_s"] / row["per_host"]["wall_s"], 2)
+        sweep.append(row)
+    return {
+        "config": {"tables": args.tables, "rows": args.rows, "dim": args.dim,
+                   "bits": qcfg.bits, "method": qcfg.method,
+                   "payload_bytes": payload,
+                   "per_link_bw_mbps": round(bw / 1e6, 2)},
+        "sweep": sweep,
+        "restored_identical": True,
+    }
+
+
 def bench_packing(n_codes: int, extra_bits: int = 4) -> dict:
     rng = np.random.default_rng(0)
     out = {}
@@ -264,12 +352,19 @@ def main(argv=None):
     ap.add_argument("--pack-codes", type=int, default=16_777_216)
     ap.add_argument("--repeats", type=int, default=5,
                     help="best-of-N timing per mode")
+    ap.add_argument("--num-hosts", default="1,2,4,8",
+                    help="comma-separated simulated host counts for the "
+                         "sharded sweep (empty string skips it)")
+    ap.add_argument("--shard-target-s", type=float, default=1.2,
+                    help="modelled 1-host transmission time for the sweep")
     ap.add_argument("--tiny", action="store_true", help="CI smoke sizes")
     ap.add_argument("--out", default="BENCH_write_path.json")
     args = ap.parse_args(argv)
     if args.tiny:
         args.tables, args.rows, args.dim = 2, 8192, 32
         args.chunk_rows, args.pack_codes = 1024, 262_144
+        args.shard_target_s = 0.3
+    args.num_hosts = [int(n) for n in str(args.num_hosts).split(",") if n]
 
     qcfg = QuantConfig(bits=args.bits, method=args.method).resolve()
 
@@ -289,6 +384,13 @@ def main(argv=None):
                                                         method="adaptive"))
         print(json.dumps(adaptive, indent=1))
 
+    sharded = None
+    if args.num_hosts:
+        print(f"== sharded multi-host sweep {args.num_hosts} "
+              f"(shared vs per-host links) ==")
+        sharded = bench_sharded(args, qcfg)
+        print(json.dumps(sharded, indent=1))
+
     print(f"== packing microbench ({args.pack_codes} codes) ==")
     pack = bench_packing(args.pack_codes, extra_bits=args.bits)
     print(json.dumps(pack, indent=1))
@@ -297,11 +399,19 @@ def main(argv=None):
         "bench": "write_path",
         "end_to_end": e2e,
         "end_to_end_adaptive": adaptive,
+        "sharded": sharded,
         "packing": pack,
         "acceptance": {
             "e2e_speedup_ge_3x": e2e["speedup_e2e"] >= 3.0,
             "pack_speedup_ge_5x": pack[f"{args.bits}bit"]["pack_speedup"] >= 5.0,
             "restored_identical": e2e["restored_identical"],
+            "sharded_restored_identical": (
+                sharded["restored_identical"] if sharded else None),
+            # per-host links must scale: 4 hosts ≥ 2× over the shared link
+            "sharded_4host_speedup_ge_2x": (
+                next((r["per_host_speedup"] >= 2.0 for r in sharded["sweep"]
+                      if r["num_hosts"] == 4), None)
+                if sharded else None),
         },
     }
     with open(args.out, "w") as f:

@@ -2,6 +2,7 @@
 
 from .bitwidth import BitwidthController, expected_failures, select_bits
 from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
+from .coordinator import CommitCoordinator, ShardCommitError
 from .pipeline import PipelineStats, WritePipeline
 from .incremental import (
     ConsecutiveIncrement,
@@ -34,7 +35,15 @@ from .storage import (
     LocalFSStore,
     ObjectStore,
     ThrottledStore,
+    host_link,
 )
-from .tracker import init_touched, mark_touched, merge_touched, reset_touched, touched_fraction
+from .tracker import (
+    init_touched,
+    mark_touched,
+    merge_touched,
+    reset_touched,
+    shard_indices,
+    touched_fraction,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -36,7 +36,9 @@ import numpy as np
 
 from . import manifest as mf
 from . import packing
+from . import tracker
 from .bitwidth import BitwidthController
+from .coordinator import CommitCoordinator
 from .incremental import IncrementalPolicy, make_policy
 from .pipeline import WritePipeline
 from .quantize import (
@@ -75,6 +77,11 @@ class CheckpointConfig:
                                                # (default 8 × chunk_rows)
     restore_workers: int = 4               # parallel chunk fetch + dequant
     quant_impl: str = "auto"               # kernels/adaptive_quant impl knob
+    # ---- sharded multi-host writers (docs/sharded_writers.md) ----
+    num_hosts: int = 1                     # >1 → per-host shard writers with
+                                           # two-phase manifest commit
+    verify_shard_chunks: bool = True       # coordinator re-checks every
+                                           # chunk's existence+size pre-commit
 
 
 @dataclasses.dataclass
@@ -122,6 +129,11 @@ class CheckNRunManager:
         self._cum_touched: Dict[str, np.ndarray] = {}     # since last committed FULL
         self._uncommitted: Dict[str, np.ndarray] = {}     # since last committed ckpt
         self._lock = threading.Lock()
+        # Orphan-blob GC bookkeeping: steps whose save failed/cancelled in
+        # THIS process (reclaimed cheaply after the next commit), plus one
+        # full namespace sweep per process for debris a predecessor left.
+        self._aborted_steps: set = set()
+        self._gc_swept = False
 
     # ------------------------------------------------------------------ save
     def save(self, snap: Snapshot, block: bool = False) -> Future:
@@ -180,20 +192,27 @@ class CheckNRunManager:
         try:
             return self._write(snap, cum, unc, cancel)
         except CheckpointCancelled:
+            self._aborted_steps.add(snap.step)
             return SaveResult(step=snap.step, kind="cancelled", nbytes=0,
                               build_time_s=0.0, write_time_s=0.0, cancelled=True)
         except Exception:
+            self._aborted_steps.add(snap.step)
             traceback.print_exc()
             raise
 
     def _select_rows(self, decision: str, name: str, rows: int,
-                     cum: Dict[str, np.ndarray], unc: Dict[str, np.ndarray]) -> np.ndarray:
+                     cum: Dict[str, np.ndarray], unc: Dict[str, np.ndarray],
+                     row_range: Optional[Tuple[int, int]] = None) -> np.ndarray:
+        """Global indices of rows to store — restricted to ``row_range``
+        (one host's shard of the table, ``[lo, hi)``) when given, so the
+        union over the host partition equals the unsharded selection."""
+        lo, hi = row_range if row_range is not None else (0, rows)
         if decision == "full":
-            return np.arange(rows, dtype=np.uint32)
+            return np.arange(lo, hi, dtype=np.uint32)
         mask = cum.get(name) if self.policy.cumulative_mask else unc.get(name)
         if mask is None:  # untracked table -> always stored fully
-            return np.arange(rows, dtype=np.uint32)
-        return np.nonzero(mask)[0].astype(np.uint32)
+            return np.arange(lo, hi, dtype=np.uint32)
+        return tracker.shard_indices(mask, lo, hi)
 
     def _quant_config(self) -> Optional[QuantConfig]:
         if self.bitwidth is not None:
@@ -242,8 +261,71 @@ class CheckNRunManager:
         return (np.asarray(q.codes), np.asarray(q.scale, dtype=np.float32),
                 np.asarray(q.zero, dtype=np.float32))
 
+    # ------------------------------------------------- shared write plumbing
+    def _make_pipeline(self, cancel, deadline) -> WritePipeline:
+        cfg = self.config
+        if cfg.pipeline:
+            return WritePipeline(encode_workers=cfg.encode_workers,
+                                 write_workers=cfg.write_workers,
+                                 max_inflight=cfg.max_inflight_chunks,
+                                 cancel=cancel, deadline=deadline)
+        # window of 1 → chunks encode and write strictly one at a time
+        return WritePipeline(encode_workers=1, write_workers=1,
+                             max_inflight=1, cancel=cancel, deadline=deadline)
+
+    def _submit_table_chunks(self, pipe: WritePipeline, name: str,
+                             tab: np.ndarray, sel: np.ndarray, aux,
+                             qcfg: Optional[QuantConfig], full: bool,
+                             key_prefix: str) -> Tuple[List[Future], float]:
+        """Stage 0 (writer/host thread): batched quantization, a few chunks
+        per kernel dispatch — bounds host memory to O(quant batch) while
+        amortizing dispatch + device→host copies; overlaps with encode/write
+        of previously submitted chunks. The ONE implementation of the chunk
+        byte format's emission — single-host and per-host shard writers both
+        go through here (key_prefix is the only difference), which is what
+        keeps their restores byte-identical. Returns (chunk futures,
+        quantize seconds)."""
+        cfg = self.config
+        qbatch = cfg.quant_batch_rows or 8 * cfg.chunk_rows
+        qbatch = max(cfg.chunk_rows, qbatch // cfg.chunk_rows * cfg.chunk_rows)
+        futs: List[Future] = []
+        quant_s = 0.0
+        seq = 0
+        for qlo in range(0, len(sel), qbatch):
+            bsel = sel[qlo: qlo + qbatch]
+            t0 = time.monotonic()
+            qenc = self._quantize_selection(tab, bsel, qcfg, contiguous=full)
+            quant_s += time.monotonic() - t0
+            for blo in range(0, len(bsel), cfg.chunk_rows):
+                bhi = min(blo + cfg.chunk_rows, len(bsel))
+                idx = bsel[blo:bhi]
+                q_slice = (None if qenc is None else
+                           (qenc[0][blo:bhi], qenc[1][blo:bhi],
+                            qenc[2][blo:bhi]))
+                key = f"{key_prefix}{name}/{seq:06d}.bin"
+                seq += 1
+                encode_fn = functools.partial(
+                    self._encode_chunk_job, key, tab, idx, aux, qcfg, full,
+                    q_slice)
+                write_fn = functools.partial(self.store.put, key)
+                futs.append(pipe.submit(encode_fn, write_fn))
+        return futs, quant_s
+
+    def _make_table_record(self, rows: int, dim: int, dtype: str, aux,
+                           qcfg: Optional[QuantConfig],
+                           chunks: List[mf.ChunkRecord]) -> mf.TableRecord:
+        return mf.TableRecord(
+            rows=rows, dim=dim, dtype=dtype,
+            bits=qcfg.bits if qcfg else None,
+            method=qcfg.method if qcfg else None,
+            row_state={a: str(v.dtype) for a, v in aux.items()},
+            chunks=chunks,
+            meta_dtype=str(np.dtype(META_DTYPE)) if qcfg else None)
+
     # ------------------------------------------------------------- the write
     def _write(self, snap: Snapshot, cum, unc, cancel: threading.Event) -> SaveResult:
+        if self.config.num_hosts > 1:
+            return self._write_sharded(snap, cum, unc, cancel)
         t_start = time.monotonic()
         step = snap.step
         decision = self.policy.decide(step)
@@ -253,15 +335,7 @@ class CheckNRunManager:
 
         deadline = (time.monotonic() + cfg.write_deadline_s
                     if cfg.write_deadline_s else None)
-        if cfg.pipeline:
-            pipe = WritePipeline(encode_workers=cfg.encode_workers,
-                                 write_workers=cfg.write_workers,
-                                 max_inflight=cfg.max_inflight_chunks,
-                                 cancel=cancel, deadline=deadline)
-        else:  # window of 1 → chunks encode and write strictly one at a time
-            pipe = WritePipeline(encode_workers=1, write_workers=1,
-                                 max_inflight=1, cancel=cancel,
-                                 deadline=deadline)
+        pipe = self._make_pipeline(cancel, deadline)
 
         quant_s = 0.0
         table_futs: Dict[str, List[Future]] = {}
@@ -272,39 +346,16 @@ class CheckNRunManager:
                 rows, dim = tab.shape
                 sel = self._select_rows(decision, name, rows, cum, unc)
                 aux = snap.row_state.get(name, {})
-                full = decision == "full"
-                # Stage 0, writer thread: batched quantization, a few chunks
-                # per kernel dispatch — bounds host memory to O(quant batch)
-                # while amortizing dispatch + device→host copies. Overlaps
-                # with encode/write of previously submitted chunks.
-                qbatch = cfg.quant_batch_rows or 8 * cfg.chunk_rows
-                qbatch = max(cfg.chunk_rows,
-                             qbatch // cfg.chunk_rows * cfg.chunk_rows)
-                futs = []
-                for qlo in range(0, len(sel), qbatch):
-                    bsel = sel[qlo: qlo + qbatch]
-                    t0 = time.monotonic()
-                    qenc = self._quantize_selection(tab, bsel, qcfg,
-                                                    contiguous=full)
-                    quant_s += time.monotonic() - t0
-                    for blo in range(0, len(bsel), cfg.chunk_rows):
-                        bhi = min(blo + cfg.chunk_rows, len(bsel))
-                        idx = bsel[blo:bhi]
-                        q_slice = (None if qenc is None else
-                                   (qenc[0][blo:bhi], qenc[1][blo:bhi],
-                                    qenc[2][blo:bhi]))
-                        key = (f"{mf.chunk_prefix(step)}{name}/"
-                               f"{(qlo + blo) // cfg.chunk_rows:06d}.bin")
-                        encode_fn = functools.partial(
-                            self._encode_chunk_job, key, tab, idx, aux, qcfg,
-                            full, q_slice)
-                        write_fn = functools.partial(self.store.put, key)
-                        futs.append(pipe.submit(encode_fn, write_fn))
+                futs, q_s = self._submit_table_chunks(
+                    pipe, name, tab, sel, aux, qcfg, decision == "full",
+                    mf.chunk_prefix(step))
+                quant_s += q_s
                 table_futs[name] = futs
                 table_shape[name] = (rows, dim, str(tab.dtype), aux)
 
             for key_name, arr in snap.dense.items():
-                key = f"{mf.chunk_prefix(step)}dense/{_sanitize(key_name)}.bin"
+                key = (f"{mf.chunk_prefix(step)}dense/"
+                       f"{mf.sanitize_key(key_name)}.bin")
                 encode_fn = functools.partial(self._encode_dense_job, key, arr)
                 write_fn = functools.partial(self.store.put, key)
                 dense_futs[key_name] = pipe.submit(encode_fn, write_fn)
@@ -321,13 +372,8 @@ class CheckNRunManager:
             rows, dim, dtype, aux = table_shape[name]
             chunks = [f.result() for f in futs]
             total_bytes += sum(c.nbytes for c in chunks)
-            tables[name] = mf.TableRecord(
-                rows=rows, dim=dim, dtype=dtype,
-                bits=qcfg.bits if qcfg else None,
-                method=qcfg.method if qcfg else None,
-                row_state={a: str(v.dtype) for a, v in aux.items()},
-                chunks=chunks,
-                meta_dtype=str(np.dtype(META_DTYPE)) if qcfg else None)
+            tables[name] = self._make_table_record(rows, dim, dtype, aux,
+                                                   qcfg, chunks)
         dense: Dict[str, mf.DenseRecord] = {}
         for key_name, fut in dense_futs.items():
             dense[key_name] = fut.result()
@@ -347,13 +393,7 @@ class CheckNRunManager:
             created_unix=time.time())
         mf.commit(self.store, man)
 
-        # post-commit bookkeeping
-        self.policy.observe(step, decision, total_bytes)
-        with self._lock:
-            if decision == "full":
-                self._cum_touched = {k: np.zeros_like(v) for k, v in self._cum_touched.items()}
-            self._uncommitted = {k: np.zeros_like(v) for k, v in self._uncommitted.items()}
-        mf.apply_retention(self.store, self.config.keep_latest, self.config.ttl_days)
+        self._post_commit(step, decision, total_bytes)
         return SaveResult(
             step=step, kind=decision, nbytes=total_bytes,
             build_time_s=quant_s + stats.encode_busy_s,
@@ -365,6 +405,103 @@ class CheckNRunManager:
                 quantize_s=quant_s, wall_s=stats.wall_s,
                 occupancy=stats.occupancy(pipe.encode_workers,
                                           pipe.write_workers)))
+
+    def _post_commit(self, step: int, decision: str, nbytes: int) -> None:
+        """Bookkeeping once the manifest is durable: advance the policy,
+        reset touched-row masks, apply retention, and reclaim the debris of
+        earlier aborted/cancelled saves (safe here — the non-overlap rule
+        means no other save is in flight)."""
+        self.policy.observe(step, decision, nbytes)
+        with self._lock:
+            if decision == "full":
+                self._cum_touched = {k: np.zeros_like(v)
+                                     for k, v in self._cum_touched.items()}
+            self._uncommitted = {k: np.zeros_like(v)
+                                 for k, v in self._uncommitted.items()}
+        mf.apply_retention(self.store, self.config.keep_latest,
+                           self.config.ttl_days)
+        # Reclaim aborted/cancelled saves' debris: one full sweep per
+        # process (debris a crashed predecessor left), then only the steps
+        # this process actually aborted — keeps the post-commit cost
+        # independent of store size on the happy path.
+        if not self._gc_swept:
+            mf.gc_aborted(self.store)
+            self._gc_swept = True
+        elif self._aborted_steps:
+            mf.gc_steps(self.store, self._aborted_steps)
+        self._aborted_steps.clear()
+
+    # ------------------------------------------------- sharded write (§3.4)
+    def _write_sharded(self, snap: Snapshot, cum, unc,
+                       cancel: threading.Event) -> SaveResult:
+        """Per-host shard writers + two-phase manifest commit. Each simulated
+        host runs its own WritePipeline over its row-shard and votes with a
+        part manifest; the coordinator commits the global manifest only when
+        every vote is present (docs/sharded_writers.md)."""
+        from ..dist.shard_writer import HostShardWriter, run_host_writers
+
+        t_start = time.monotonic()
+        step = snap.step
+        cfg = self.config
+        decision = self.policy.decide(step)
+        qcfg = self._quant_config()
+        qcfg = qcfg.resolve() if qcfg is not None else None
+        deadline = (time.monotonic() + cfg.write_deadline_s
+                    if cfg.write_deadline_s else None)
+
+        # Overwriting a committed step in place is unsafe under any crash
+        # (hosts rewrite chunk blobs the live manifest references), so the
+        # sharded path refuses it loudly instead of risking a torn
+        # "committed" checkpoint. Checkpoint steps are monotone in every
+        # supported flow.
+        if self.store.exists(mf.manifest_key(step)):
+            raise ValueError(
+                f"step {step} already has a committed checkpoint; sharded "
+                f"saves never overwrite committed steps")
+        # Purge stale phase-1 votes from an earlier aborted attempt at this
+        # step: a leftover part manifest could otherwise satisfy collect()
+        # for a host that dies during THIS attempt (same step/host/num_hosts
+        # stamps, same chunk sizes) and launder attempt-mixed state into a
+        # committed manifest. Votes are cheap to rewrite; stale chunk blobs
+        # are harmless (each vote only references chunks its own attempt
+        # durably wrote before voting).
+        for key in self.store.list(mf.part_prefix(step)):
+            self.store.delete(key)
+
+        prev = mf.latest_step(self.store)  # before commit, like single-host
+        writers = [HostShardWriter(h, cfg.num_hosts, self.store, self,
+                                   cancel=cancel, deadline=deadline)
+                   for h in range(cfg.num_hosts)]
+        run_host_writers(writers, snap, decision, qcfg, cum, unc)
+
+        coord = CommitCoordinator(self.store, cfg.num_hosts,
+                                  verify_chunks=cfg.verify_shard_chunks)
+        base = (step if decision == "full" else self.policy.state.baseline_step)
+        man = coord.commit(
+            step,
+            kind=decision, base_step=base, prev_step=prev,
+            quant=(dataclasses.asdict(qcfg) if qcfg else None),
+            policy=self.policy.to_dict() | {"name": self.policy.name},
+            extra=snap.extra | {"bitwidth": (self.bitwidth.to_dict()
+                                             if self.bitwidth else None)},
+            wall_time_s=time.monotonic() - t_start)
+
+        self._post_commit(step, decision, man.nbytes_total)
+        per_host = [w.stats for w in writers]
+        return SaveResult(
+            step=step, kind=decision, nbytes=man.nbytes_total,
+            build_time_s=sum(s["quantize_s"] + s["encode_busy_s"]
+                             for s in per_host),
+            write_time_s=sum(s["write_busy_s"] for s in per_host),
+            pipeline_stats=dict(
+                num_hosts=cfg.num_hosts,
+                items=sum(s["items"] for s in per_host),
+                payload_bytes=sum(s["payload_bytes"] for s in per_host),
+                encode_busy_s=sum(s["encode_busy_s"] for s in per_host),
+                write_busy_s=sum(s["write_busy_s"] for s in per_host),
+                quantize_s=sum(s["quantize_s"] for s in per_host),
+                wall_s=time.monotonic() - t_start,
+                per_host=per_host))
 
     # ---------------------------------------------------------- encode stage
     def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, q_slice):
@@ -453,14 +590,7 @@ class CheckNRunManager:
                     row_state[name] = {}  # allocated lazily (aux width varies)
                 self._apply_table(tables[name], row_state[name], rec, man)
         final = chain[-1]
-        dense = {}
-        dense_keys = [rec.key for rec in final.dense.values()]
-        dense_blobs = store.get_many(dense_keys,
-                                     max_workers=self.config.restore_workers)
-        for (key_name, rec), data in zip(final.dense.items(), dense_blobs):
-            if ObjectStore.checksum(data) != rec.crc32:
-                raise IOError(f"checksum mismatch for {rec.key}")
-            dense[key_name] = np.frombuffer(data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
+        dense = self._restore_dense(final)
         # Resync host bookkeeping + policy so saves after restore are coherent.
         self.policy.load_dict(final.policy)
         if self.bitwidth is not None and final.extra.get("bitwidth"):
@@ -472,22 +602,95 @@ class CheckNRunManager:
         return RestoredState(step=final.step, tables=tables, row_state=row_state,
                              dense=dense, extra=final.extra, chain_len=len(chain))
 
+    def restore_part(self, host: int, step: Optional[int] = None) -> RestoredState:
+        """Lazily shard-read ONE host's row-shard of a sharded checkpoint:
+        only that host's part manifests and chunk blobs are fetched (plus
+        the final step's dense params, which are global). Table arrays in
+        the result cover just the host's row range; ``extra["shard"]``
+        records the ranges. Requires every manifest in the recovery chain to
+        be sharded with the same ``num_hosts``.
+
+        A reader-side operation: does NOT resync the manager's policy or
+        touched-row bookkeeping (use :meth:`restore` to resume training)."""
+        from ..dist.sharding import row_shard_bounds
+
+        store = self.store
+        if step is None:
+            step = mf.latest_step(store)
+        if step is None:
+            raise FileNotFoundError("no valid checkpoint found")
+        chain = mf.recovery_chain(store, step)
+        final = chain[-1]
+        num_hosts = (final.shards or {}).get("num_hosts")
+        if num_hosts is None:
+            raise ValueError(f"checkpoint {step} is not sharded; use restore()")
+        if not 0 <= host < num_hosts:
+            raise ValueError(f"host {host} out of range for {num_hosts} hosts")
+        for man in chain:
+            if (man.shards or {}).get("num_hosts") != num_hosts:
+                raise ValueError(
+                    f"recovery chain step {man.step} has a different shard "
+                    f"layout; use restore()")
+
+        tables: Dict[str, np.ndarray] = {}
+        row_state: Dict[str, Dict[str, np.ndarray]] = {}
+        ranges: Dict[str, List[int]] = {}
+        for man in chain:
+            part = mf.load_part(store, man.step, host)
+            for name, rec in part.tables.items():
+                if name not in tables:
+                    # shard-sized scratch: a host's chunks only reference
+                    # rows in its range, scattered at offset -lo — memory
+                    # stays O(shard), not O(table)
+                    lo, hi = row_shard_bounds(rec.rows, num_hosts)[host]
+                    ranges[name] = [lo, hi]
+                    tables[name] = np.zeros((hi - lo, rec.dim), np.float32)
+                    row_state[name] = {}
+                self._apply_table(tables[name], row_state[name], rec, man,
+                                  row_offset=ranges[name][0])
+
+        dense = self._restore_dense(final)
+        extra = dict(final.extra)
+        extra["shard"] = {"host": host, "num_hosts": num_hosts,
+                          "row_range": ranges}
+        return RestoredState(step=final.step, tables=tables,
+                             row_state=row_state, dense=dense, extra=extra,
+                             chain_len=len(chain))
+
+    def _restore_dense(self, man: mf.Manifest) -> Dict[str, np.ndarray]:
+        """Fetch + checksum + decode a manifest's dense params in parallel
+        (dense is global, shared by restore() and restore_part())."""
+        dense: Dict[str, np.ndarray] = {}
+        keys = [rec.key for rec in man.dense.values()]
+        blobs = self.store.get_many(keys,
+                                    max_workers=self.config.restore_workers)
+        for (key_name, rec), data in zip(man.dense.items(), blobs):
+            if ObjectStore.checksum(data) != rec.crc32:
+                raise IOError(f"checksum mismatch for {rec.key}")
+            dense[key_name] = np.frombuffer(
+                data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
+        return dense
+
     def _apply_table(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
-                     rec: mf.TableRecord, man: mf.Manifest) -> None:
+                     rec: mf.TableRecord, man: mf.Manifest,
+                     row_offset: int = 0) -> None:
         """Fetch + decode + scatter one manifest's chunks for one table.
         Chunks within a manifest cover disjoint rows, so they decode and
-        scatter concurrently on ``restore_workers`` threads."""
+        scatter concurrently on ``restore_workers`` threads. ``row_offset``
+        shifts the chunks' global row indices into a shard-local ``out``
+        (restore_part); 0 means ``out`` covers the whole table."""
         chunks = [ch for ch in rec.chunks if ch.n_rows > 0]
         if not chunks:
             return
         aux_lock = threading.Lock()
         run_parallel([functools.partial(self._apply_chunk, out, aux_out,
-                                        aux_lock, rec, ch) for ch in chunks],
+                                        aux_lock, rec, ch, row_offset)
+                      for ch in chunks],
                      self.config.restore_workers, "cnr-restore")
 
     def _apply_chunk(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
                      aux_lock: threading.Lock, rec: mf.TableRecord,
-                     ch: mf.ChunkRecord) -> None:
+                     ch: mf.ChunkRecord, row_offset: int = 0) -> None:
         dim = rec.dim
         data = self.store.get(ch.key)
         if ObjectStore.checksum(data) != ch.crc32:
@@ -498,6 +701,8 @@ class CheckNRunManager:
         else:
             lo, hi = ch.row_range
             idx = np.arange(lo, hi, dtype=np.int64)
+        if row_offset:
+            idx = idx - row_offset
         if "values" in ch.sections:
             o, n = ch.sections["values"]
             vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
@@ -532,13 +737,10 @@ class CheckNRunManager:
             width = a_vals.size // max(ch.n_rows, 1)
             with aux_lock:
                 if a_name not in aux_out:
-                    shape = (rec.rows,) if width == 1 else (rec.rows, width)
+                    rows = out.shape[0]  # == rec.rows unless shard-local
+                    shape = (rows,) if width == 1 else (rows, width)
                     aux_out[a_name] = np.zeros(shape, dtype=np.dtype(a_dt))
             if width == 1:
                 aux_out[a_name][idx] = a_vals
             else:
                 aux_out[a_name][idx] = a_vals.reshape(-1, width)
-
-
-def _sanitize(key: str) -> str:
-    return key.replace("/", "__").replace(" ", "_").replace("'", "").replace("[", "(").replace("]", ")")

@@ -1,0 +1,165 @@
+"""Two-phase commit coordinator for sharded checkpoints (§3.4).
+
+Protocol (see docs/sharded_writers.md for the crash matrix):
+
+  phase 1 — every simulated host writes its chunk blobs under
+            ``chunks/ckpt_<step>/host_<h>/`` and, only once its WritePipeline
+            has drained (all chunks durable), publishes its
+            :class:`~repro.core.manifest.PartManifest` under
+            ``parts/ckpt_<step>/host_<h>.json``. The part manifest IS the
+            host's vote: present ⇔ "this host finished storing its part".
+  phase 2 — the coordinator re-reads every part from the store (reading the
+            blob back is the durability proof; nothing is trusted from
+            memory), optionally verifies each referenced chunk exists with
+            the recorded size, merges the parts into one global
+            :class:`~repro.core.manifest.Manifest` carrying a ``shards``
+            map, and writes it. That single manifest put is the atomic
+            commit point — a crash anywhere before it leaves the previous
+            checkpoint as the latest valid one.
+
+Aborted saves (missing votes, failed verification, crashes) never commit;
+their chunk blobs and part manifests are reclaimed by
+:func:`repro.core.manifest.gc_aborted`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from . import manifest as mf
+from .storage import ObjectStore
+
+
+class ShardCommitError(RuntimeError):
+    """A sharded checkpoint cannot commit: a host's part is missing,
+    inconsistent with its peers, or references chunks that are not durable."""
+
+
+class CommitCoordinator:
+    """Commits a sharded checkpoint only when every host's part is present.
+
+    One coordinator per store; stateless between calls, so crash-recovery is
+    trivial (re-run the save — committed manifests are immutable and
+    orphaned parts are GC'd)."""
+
+    def __init__(self, store: ObjectStore, num_hosts: int,
+                 verify_chunks: bool = True) -> None:
+        if num_hosts <= 0:
+            raise ValueError(f"num_hosts must be positive, got {num_hosts}")
+        self.store = store
+        self.num_hosts = num_hosts
+        self.verify_chunks = verify_chunks
+
+    # ------------------------------------------------------------ phase two
+    def ready_hosts(self, step: int) -> List[int]:
+        return mf.list_part_hosts(self.store, step)
+
+    def collect(self, step: int):
+        """Load and validate all parts for ``step``. Raises
+        :class:`ShardCommitError` unless every host 0..num_hosts-1 has a
+        durable, self-consistent part."""
+        parts: List[mf.PartManifest] = []
+        raws: List[bytes] = []
+        for host in range(self.num_hosts):
+            key = mf.part_key(step, host)
+            try:
+                raw = self.store.get(key)
+            except (KeyError, FileNotFoundError):
+                present = self.ready_hosts(step)
+                raise ShardCommitError(
+                    f"step {step}: part for host {host} missing "
+                    f"(present: {present} of {self.num_hosts})")
+            part = mf.PartManifest.from_json(raw.decode())
+            if (part.step, part.host, part.num_hosts) != (step, host, self.num_hosts):
+                raise ShardCommitError(
+                    f"step {step}: part {key} claims step={part.step} "
+                    f"host={part.host} num_hosts={part.num_hosts}")
+            parts.append(part)
+            raws.append(raw)
+        if self.verify_chunks:
+            self._verify_chunks(parts)
+        return parts, raws
+
+    def _verify_chunks(self, parts) -> None:
+        for part in parts:
+            records = [ch for rec in part.tables.values() for ch in rec.chunks]
+            records += list(part.dense.values())
+            for rec in records:
+                if not self.store.exists(rec.key):
+                    raise ShardCommitError(
+                        f"step {part.step} host {part.host}: chunk "
+                        f"{rec.key} not durable")
+                if self.store.size(rec.key) != rec.nbytes:
+                    raise ShardCommitError(
+                        f"step {part.step} host {part.host}: chunk "
+                        f"{rec.key} truncated ({self.store.size(rec.key)} "
+                        f"!= {rec.nbytes} bytes)")
+
+    @staticmethod
+    def merge_parts(parts) -> Dict[str, Any]:
+        """Merge per-host parts into global table/dense records. Chunks are
+        concatenated in host order (each host's chunks already in submission
+        order), keeping manifest chunk order deterministic. Hosts must agree
+        on every table's shape/encoding; dense keys must be owned by exactly
+        one host."""
+        tables: Dict[str, mf.TableRecord] = {}
+        dense: Dict[str, mf.DenseRecord] = {}
+        nbytes = 0
+        for part in parts:
+            nbytes += part.nbytes_total
+            for name, rec in part.tables.items():
+                if name not in tables:
+                    tables[name] = mf.TableRecord(
+                        rows=rec.rows, dim=rec.dim, dtype=rec.dtype,
+                        bits=rec.bits, method=rec.method,
+                        row_state=dict(rec.row_state), chunks=[],
+                        meta_dtype=rec.meta_dtype)
+                agg = tables[name]
+                meta = (rec.rows, rec.dim, rec.dtype, rec.bits, rec.method,
+                        rec.row_state, rec.meta_dtype)
+                agg_meta = (agg.rows, agg.dim, agg.dtype, agg.bits,
+                            agg.method, agg.row_state, agg.meta_dtype)
+                if meta != agg_meta:
+                    raise ShardCommitError(
+                        f"hosts disagree on table {name!r}: "
+                        f"{meta} vs {agg_meta}")
+                agg.chunks.extend(rec.chunks)
+            for key_name, drec in part.dense.items():
+                if key_name in dense:
+                    raise ShardCommitError(
+                        f"dense param {key_name!r} written by two hosts")
+                dense[key_name] = drec
+        return dict(tables=tables, dense=dense, nbytes_total=nbytes)
+
+    def commit(self, step: int, *, kind: str, base_step: Optional[int],
+               prev_step: Optional[int], quant: Optional[dict], policy: dict,
+               extra: Dict[str, Any], wall_time_s: float) -> mf.Manifest:
+        """Phase 2: verify every vote, merge, write the global manifest."""
+        parts, raws = self.collect(step)
+        merged = self.merge_parts(parts)
+        shards = {
+            "num_hosts": self.num_hosts,
+            "parts": [
+                dict(host=p.host, key=mf.part_key(step, p.host),
+                     crc32=ObjectStore.checksum(raw), nbytes=len(raw))
+                for p, raw in zip(parts, raws)
+            ],
+        }
+        man = mf.Manifest(
+            step=step, kind=kind, base_step=base_step, prev_step=prev_step,
+            quant=quant, policy=policy, tables=merged["tables"],
+            dense=merged["dense"], extra=extra,
+            nbytes_total=merged["nbytes_total"], wall_time_s=wall_time_s,
+            created_unix=time.time(), shards=shards)
+        mf.commit(self.store, man)
+        return man
+
+    # --------------------------------------------------------------- abort
+    def abort(self, step: int) -> int:
+        """Best-effort reclaim of an aborted save's blobs. Refuses to touch
+        a committed step (its manifest exists); otherwise delegates to the
+        one reclamation implementation (:func:`manifest.gc_steps`)."""
+        if self.store.exists(mf.manifest_key(step)):
+            raise ShardCommitError(f"step {step} is committed; use retention")
+        return mf.gc_steps(self.store, [step]).get(step, 0)

@@ -6,6 +6,14 @@ A checkpoint is VALID iff its manifest object exists; chunk blobs are written
 first, the manifest last. Manifests carry everything needed for recovery:
 chunk keys + checksums, quantization parameters, the baseline/previous-step
 chain for incremental policies, policy + reader state, and byte accounting.
+
+Sharded (multi-host) checkpoints add one level: each host writes its chunk
+blobs under ``chunks/ckpt_<step>/host_<h>/`` and then publishes a
+:class:`PartManifest` under ``parts/ckpt_<step>/host_<h>.json`` — the
+phase-1 vote of the two-phase commit. The coordinator
+(``repro.core.coordinator``) writes the single global manifest (carrying a
+``shards`` map plus the merged table records) only once every host's part is
+present, so the global manifest key stays the one atomic commit point.
 """
 
 from __future__ import annotations
@@ -13,11 +21,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 from .storage import ObjectStore
 
 MANIFEST_PREFIX = "manifests/"
+PART_PREFIX = "parts/"
+CHUNK_PREFIX = "chunks/"
 
 
 def manifest_key(step: int) -> str:
@@ -25,7 +35,29 @@ def manifest_key(step: int) -> str:
 
 
 def chunk_prefix(step: int) -> str:
-    return f"chunks/ckpt_{step:012d}/"
+    return f"{CHUNK_PREFIX}ckpt_{step:012d}/"
+
+
+def part_prefix(step: int) -> str:
+    return f"{PART_PREFIX}ckpt_{step:012d}/"
+
+
+def part_key(step: int, host: int) -> str:
+    return f"{part_prefix(step)}host_{host:04d}.json"
+
+
+def chunk_host_prefix(step: int, host: int) -> str:
+    """Per-host chunk namespace. Lives under ``chunk_prefix(step)`` so
+    retention's prefix delete reclaims sharded and single-host layouts
+    alike."""
+    return f"{chunk_prefix(step)}host_{host:04d}/"
+
+
+def sanitize_key(key: str) -> str:
+    """Flatten a param path into one key segment (shared by the single-host
+    and per-host dense layouts — the rules must never diverge)."""
+    return (key.replace("/", "__").replace(" ", "_").replace("'", "")
+            .replace("[", "(").replace("]", ")"))
 
 
 @dataclasses.dataclass
@@ -72,6 +104,61 @@ class DenseRecord:
         return dataclasses.asdict(self)
 
 
+def _tables_to_dict(tables: Dict[str, TableRecord]) -> dict:
+    return {k: v.to_dict() for k, v in tables.items()}
+
+
+def _tables_from_dict(d: dict) -> Dict[str, TableRecord]:
+    tables = {}
+    for name, t in d.items():
+        chunks = [ChunkRecord(**c) for c in t.pop("chunks")]
+        tables[name] = TableRecord(chunks=chunks, **t)
+    return tables
+
+
+@dataclasses.dataclass
+class PartManifest:
+    """One host's durable share of a sharded checkpoint (phase-1 vote).
+
+    Published only after every chunk it references is stored; its existence
+    means "this host finished storing its part" (paper §3.4). Chunk row
+    indices are GLOBAL table rows, so merged parts restore with the same
+    scatter path as single-host chunks."""
+
+    step: int
+    host: int
+    num_hosts: int
+    tables: Dict[str, TableRecord]
+    dense: Dict[str, DenseRecord]
+    nbytes_total: int
+    created_unix: float
+
+    def to_json(self) -> str:
+        d = dict(
+            step=self.step,
+            host=self.host,
+            num_hosts=self.num_hosts,
+            tables=_tables_to_dict(self.tables),
+            dense={k: v.to_dict() for k, v in self.dense.items()},
+            nbytes_total=self.nbytes_total,
+            created_unix=self.created_unix,
+        )
+        return json.dumps(d, indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PartManifest":
+        d = json.loads(s)
+        return cls(
+            step=d["step"],
+            host=d["host"],
+            num_hosts=d["num_hosts"],
+            tables=_tables_from_dict(d["tables"]),
+            dense={k: DenseRecord(**v) for k, v in d["dense"].items()},
+            nbytes_total=d["nbytes_total"],
+            created_unix=d.get("created_unix", 0.0),
+        )
+
+
 @dataclasses.dataclass
 class Manifest:
     step: int
@@ -86,6 +173,10 @@ class Manifest:
     nbytes_total: int
     wall_time_s: float
     created_unix: float
+    # Sharded checkpoints only: {"num_hosts": N, "parts": [{"host", "key",
+    # "crc32", "nbytes"}, ...]} over the per-host part manifests merged into
+    # ``tables``/``dense``. None for single-host checkpoints.
+    shards: Optional[dict] = None
 
     def to_json(self) -> str:
         d = dict(
@@ -95,22 +186,19 @@ class Manifest:
             prev_step=self.prev_step,
             quant=self.quant,
             policy=self.policy,
-            tables={k: v.to_dict() for k, v in self.tables.items()},
+            tables=_tables_to_dict(self.tables),
             dense={k: v.to_dict() for k, v in self.dense.items()},
             extra=self.extra,
             nbytes_total=self.nbytes_total,
             wall_time_s=self.wall_time_s,
             created_unix=self.created_unix,
+            shards=self.shards,
         )
         return json.dumps(d, indent=1, sort_keys=True)
 
     @classmethod
     def from_json(cls, s: str) -> "Manifest":
         d = json.loads(s)
-        tables = {}
-        for name, t in d["tables"].items():
-            chunks = [ChunkRecord(**c) for c in t.pop("chunks")]
-            tables[name] = TableRecord(chunks=chunks, **t)
         dense = {k: DenseRecord(**v) for k, v in d["dense"].items()}
         return cls(
             step=d["step"],
@@ -119,12 +207,13 @@ class Manifest:
             prev_step=d.get("prev_step"),
             quant=d.get("quant"),
             policy=d["policy"],
-            tables=tables,
+            tables=_tables_from_dict(d["tables"]),
             dense=dense,
             extra=d.get("extra", {}),
             nbytes_total=d["nbytes_total"],
             wall_time_s=d.get("wall_time_s", 0.0),
             created_unix=d.get("created_unix", 0.0),
+            shards=d.get("shards"),
         )
 
 
@@ -134,6 +223,29 @@ def commit(store: ObjectStore, manifest: Manifest) -> None:
 
 def load(store: ObjectStore, step: int) -> Manifest:
     return Manifest.from_json(store.get(manifest_key(step)).decode())
+
+
+def publish_part(store: ObjectStore, part: PartManifest) -> str:
+    """Phase-1 vote: durably record one host's finished part. Must only be
+    called after every chunk the part references is stored."""
+    key = part_key(part.step, part.host)
+    store.put(key, part.to_json().encode())
+    return key
+
+
+def load_part(store: ObjectStore, step: int, host: int) -> PartManifest:
+    return PartManifest.from_json(store.get(part_key(step, host)).decode())
+
+
+def list_part_hosts(store: ObjectStore, step: int) -> List[int]:
+    """Hosts whose part manifests for ``step`` are durable."""
+    hosts = []
+    prefix = part_prefix(step)
+    for key in store.list(prefix):
+        name = key[len(prefix):]
+        if name.startswith("host_") and name.endswith(".json"):
+            hosts.append(int(name[len("host_"): -len(".json")]))
+    return sorted(hosts)
 
 
 def list_steps(store: ObjectStore) -> List[int]:
@@ -204,6 +316,81 @@ def apply_retention(store: ObjectStore, keep_latest: int = 1,
             continue  # never delete the newest valid checkpoint
         for key in store.list(chunk_prefix(s)):
             store.delete(key)
+        for key in store.list(part_prefix(s)):
+            store.delete(key)
         store.delete(manifest_key(s))
         deleted.append(s)
     return deleted
+
+
+def _steps_under(store: ObjectStore, prefix: str) -> set:
+    """Steps that own blobs under ``prefix`` ("<prefix>ckpt_<step>/...")."""
+    steps = set()
+    plen = len(prefix)
+    for key in store.list(prefix):
+        name = key[plen:]
+        if not name.startswith("ckpt_"):
+            continue
+        digits = name[len("ckpt_"):].split("/", 1)[0]
+        if digits.isdigit():
+            steps.add(int(digits))
+    return steps
+
+
+def aborted_steps(store: ObjectStore) -> List[int]:
+    """Steps with chunk blobs or part manifests but NO committed global
+    manifest — the debris of crashed or cancelled saves."""
+    committed = set(list_steps(store))
+    orphans = (_steps_under(store, CHUNK_PREFIX)
+               | _steps_under(store, PART_PREFIX)) - committed
+    return sorted(orphans)
+
+
+def _step_of_key(key: str, prefix: str) -> Optional[int]:
+    name = key[len(prefix):]
+    if not name.startswith("ckpt_"):
+        return None
+    digits = name[len("ckpt_"):].split("/", 1)[0].split(".", 1)[0]
+    return int(digits) if digits.isdigit() else None
+
+
+def gc_aborted(store: ObjectStore,
+               exclude_steps: Iterable[int] = ()) -> Dict[int, int]:
+    """Reclaim chunk blobs and part manifests of aborted saves (no global
+    manifest ⇒ the checkpoint never committed, per §3.4 its blobs are
+    garbage). Only safe while no save is in flight — the manager calls it
+    post-commit, where the non-overlap rule guarantees that. Returns
+    ``{step: deleted_key_count}``.
+
+    Single pass: each blob namespace is listed exactly once and deletions
+    come from those listings — this runs on the writer thread after every
+    committed save, so it must not re-walk the store per aborted step."""
+    committed = set(list_steps(store))
+    excluded = set(exclude_steps) | committed
+    reclaimed: Dict[int, int] = {}
+    for prefix in (CHUNK_PREFIX, PART_PREFIX):
+        for key in store.list(prefix):
+            s = _step_of_key(key, prefix)
+            if s is None or s in excluded:
+                continue
+            store.delete(key)
+            reclaimed[s] = reclaimed.get(s, 0) + 1
+    return reclaimed
+
+
+def gc_steps(store: ObjectStore, steps: Iterable[int]) -> Dict[int, int]:
+    """Targeted variant of :func:`gc_aborted`: reclaim only the named
+    steps' blobs (skipping any that committed). Lets the manager clean the
+    aborts it witnessed without sweeping the whole namespace every save."""
+    reclaimed: Dict[int, int] = {}
+    for s in sorted(set(steps)):
+        if store.exists(manifest_key(s)):
+            continue
+        n = 0
+        for key in (list(store.list(chunk_prefix(s)))
+                    + list(store.list(part_prefix(s)))):
+            store.delete(key)
+            n += 1
+        if n:
+            reclaimed[s] = n
+    return reclaimed

@@ -19,7 +19,7 @@ import threading
 import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 class StoreCounters:
@@ -163,9 +163,13 @@ class LocalFSStore(ObjectStore):
         self.root = root
         os.makedirs(root, exist_ok=True)
 
+    def _contained(self, path: str) -> bool:
+        root = os.path.normpath(self.root)
+        return path == root or path.startswith(root + os.sep)
+
     def _path(self, key: str) -> str:
         path = os.path.normpath(os.path.join(self.root, key))
-        if not path.startswith(os.path.normpath(self.root)):
+        if not self._contained(path):
             raise ValueError(f"key escapes store root: {key!r}")
         return path
 
@@ -194,8 +198,18 @@ class LocalFSStore(ObjectStore):
         self.counters.on_delete()
 
     def list(self, prefix: str = "") -> Iterable[str]:
+        # walk only the prefix's directory subtree — listing one step's
+        # chunks must not scan every retained checkpoint's files
+        base = self.root
+        if "/" in prefix:
+            subdir = prefix.rsplit("/", 1)[0]
+            base = os.path.normpath(os.path.join(self.root, subdir))
+            if not self._contained(base):
+                raise ValueError(f"prefix escapes store root: {prefix!r}")
+            if not os.path.isdir(base):
+                return []
         out = []
-        for dirpath, _, files in os.walk(self.root):
+        for dirpath, _, files in os.walk(base):
             for fn in files:
                 if fn.endswith(".tmp") or ".tmp." in fn:
                     continue
@@ -212,32 +226,60 @@ class LocalFSStore(ObjectStore):
         return os.path.getsize(self._path(key))
 
 
+def host_link(key: str) -> int:
+    """Link selector for per-host link modelling: keys inside a host
+    namespace (``.../host_<h>/...`` chunks, ``.../host_<h>.json`` parts) map
+    to that host's link; everything else (manifests, single-host layouts)
+    rides link 0."""
+    i = key.find("host_")
+    if i < 0:
+        return 0
+    digits = key[i + len("host_"):].split("/", 1)[0].split(".", 1)[0]
+    return int(digits) if digits.isdigit() else 0
+
+
 class ThrottledStore(ObjectStore):
     """Caps write bandwidth (bytes/sec) to emulate remote-storage limits.
 
-    Concurrent ``put`` calls share ONE link: each reserves a transmission
-    slot on a common timeline, so N parallel writers never exceed the
-    configured aggregate bandwidth. This keeps the pipelined write engine
-    honest — parallelism overlaps encoding with the link, it does not
-    conjure extra bandwidth.
+    By default concurrent ``put`` calls share ONE link: each reserves a
+    transmission slot on a common timeline, so N parallel writers never
+    exceed the configured aggregate bandwidth. This keeps the pipelined
+    write engine honest — parallelism overlaps encoding with the link, it
+    does not conjure extra bandwidth.
+
+    With ``num_links > 1`` the store models per-host uplinks instead: a
+    ``link_of(key)`` selector (e.g. :func:`host_link`) routes each put to
+    one of ``num_links`` independent timelines, each capped at
+    ``write_bytes_per_sec``. Shared-aggregate vs per-host links is exactly
+    the comparison ``benchmarks/write_path.py --num-hosts`` sweeps.
     """
 
     def __init__(self, inner: ObjectStore, write_bytes_per_sec: float,
-                 cancel_event: Optional[threading.Event] = None) -> None:
+                 cancel_event: Optional[threading.Event] = None,
+                 num_links: int = 1,
+                 link_of: Optional[Callable[[str], int]] = None) -> None:
         super().__init__()
         self.inner = inner
         self.bw = float(write_bytes_per_sec)
         self.cancel_event = cancel_event or threading.Event()
         self.counters = inner.counters
+        self.num_links = max(1, num_links)
+        self.link_of = link_of
         self._link_lock = threading.Lock()
-        self._link_free_at = 0.0
+        self._link_free_at = [0.0] * self.num_links
+
+    def _link_index(self, key: str) -> int:
+        if self.link_of is None or self.num_links == 1:
+            return 0
+        return self.link_of(key) % self.num_links
 
     def put(self, key: str, data: bytes) -> None:
         delay = len(data) / self.bw
+        link = self._link_index(key)
         with self._link_lock:
-            start = max(time.monotonic(), self._link_free_at)
+            start = max(time.monotonic(), self._link_free_at[link])
             end = start + delay
-            self._link_free_at = end
+            self._link_free_at[link] = end
         try:
             # Sleep in slices so a cancel (straggler mitigation, §3.3)
             # interrupts mid-transmission.
@@ -254,7 +296,7 @@ class ThrottledStore(ObjectStore):
             # cancellations refund correctly in any order.
             with self._link_lock:
                 unused = max(0.0, end - max(time.monotonic(), start))
-                self._link_free_at -= unused
+                self._link_free_at[link] -= unused
             raise
         self.inner.put(key, data)
 

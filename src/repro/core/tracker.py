@@ -18,6 +18,7 @@ from typing import Dict, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def init_touched(num_rows: int) -> jax.Array:
@@ -39,6 +40,15 @@ def reset_touched(mask: jax.Array) -> jax.Array:
 
 def touched_fraction(mask: jax.Array) -> jax.Array:
     return jnp.mean(mask.astype(jnp.float32))
+
+
+def shard_indices(mask: np.ndarray, lo: int, hi: int) -> np.ndarray:
+    """One host's view of a touched-row set: GLOBAL indices of touched rows
+    inside its range ``[lo, hi)``. Host-side (numpy) — runs on the already
+    device→host-copied snapshot mask. Unioning the result over the row
+    partition reproduces ``np.nonzero(mask)`` exactly, which is what keeps
+    incremental policies coherent under sharded writers."""
+    return (np.nonzero(np.asarray(mask[lo:hi]))[0] + lo).astype(np.uint32)
 
 
 def tree_reset(masks: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:

@@ -1,0 +1,160 @@
+"""Per-host shard writers for sharded multi-host checkpointing (§3.4).
+
+Each simulated host owns a contiguous row-shard of every embedding table
+(``repro.dist.sharding.row_shard_bounds`` — the host-level analogue of
+range-partitioning "embed_rows" over the mesh) and runs its OWN
+:class:`~repro.core.pipeline.WritePipeline` over that shard: batched
+quantization, encode workers, upload workers, bounded in-flight window —
+exactly the single-host engine, instantiated once per host. Chunk blobs go
+under the host's key prefix (``chunks/ckpt_<step>/host_<h>/``); once the
+pipeline drains, the host publishes its part manifest (phase-1 vote, see
+``repro.core.coordinator``).
+
+Chunk row indices stay GLOBAL, so a merged sharded checkpoint restores
+through the unchanged scatter path — byte-identically to a single-host save
+of the same snapshot (quantization is row-wise, hence partition-invariant).
+One carve-out: ``aux_bits=8`` compresses optimizer aux with per-CHUNK
+min/max ranges, and the chunk partition shifts with the shard layout, so
+that lossy-aux config reconstructs aux within its quantization error but
+not bit-for-bit across different ``num_hosts``.
+
+Encoding (quantize → pack → checksum) is delegated to the ``encoder``
+collaborator (the :class:`~repro.core.checkpoint.CheckNRunManager`), so the
+byte format has exactly one implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+from ..core import manifest as mf
+from ..core.storage import CheckpointCancelled, ObjectStore
+from .sharding import row_shard_bounds
+
+
+def dense_owner(name: str, num_hosts: int) -> int:
+    """Stable assignment of a dense param to the host that writes it."""
+    return zlib.crc32(name.encode()) % num_hosts
+
+
+class HostShardWriter:
+    """One simulated host's write engine for one checkpoint attempt."""
+
+    def __init__(self, host: int, num_hosts: int, store: ObjectStore,
+                 encoder, cancel=None, deadline: Optional[float] = None) -> None:
+        self.host = host
+        self.num_hosts = num_hosts
+        self.store = store
+        self.enc = encoder
+        self.cancel = cancel
+        self.deadline = deadline
+        self.stats: Dict[str, float] = {}
+
+    def write_part(self, snap, decision: str, qcfg, cum, unc) -> mf.PartManifest:
+        """Write this host's shard of ``snap`` and publish its part manifest.
+        Returns only after the vote is durable; raises on any failure, in
+        which case NO part manifest exists for this host.
+
+        Chunk emission goes through the encoder's shared plumbing
+        (``_submit_table_chunks`` / ``_make_table_record``) — the host key
+        prefix and the row-range selection are the only differences from the
+        single-host path, which is what keeps restores byte-identical."""
+        step = snap.step
+        full = decision == "full"
+        prefix = mf.chunk_host_prefix(step, self.host)
+        quant_s = 0.0
+        pipe = self.enc._make_pipeline(self.cancel, self.deadline)
+        table_futs: Dict[str, list] = {}
+        table_shape: Dict[str, tuple] = {}
+        dense_futs: Dict[str, object] = {}
+        try:
+            for name, tab in snap.tables.items():
+                rows, dim = tab.shape
+                lo, hi = row_shard_bounds(rows, self.num_hosts)[self.host]
+                sel = self.enc._select_rows(decision, name, rows, cum, unc,
+                                            row_range=(lo, hi))
+                aux = snap.row_state.get(name, {})
+                futs, q_s = self.enc._submit_table_chunks(
+                    pipe, name, tab, sel, aux, qcfg, full, prefix)
+                quant_s += q_s
+                table_futs[name] = futs
+                table_shape[name] = (rows, dim, str(tab.dtype), aux)
+
+            for key_name, arr in snap.dense.items():
+                if dense_owner(key_name, self.num_hosts) != self.host:
+                    continue
+                key = f"{prefix}dense/{mf.sanitize_key(key_name)}.bin"
+                encode_fn = functools.partial(self.enc._encode_dense_job,
+                                              key, arr)
+                write_fn = functools.partial(self.store.put, key)
+                dense_futs[key_name] = pipe.submit(encode_fn, write_fn)
+
+            pipe.drain()  # every chunk durable (or raise — no vote)
+        finally:
+            pipe.close()
+
+        tables: Dict[str, mf.TableRecord] = {}
+        nbytes = 0
+        for name, futs in table_futs.items():
+            rows, dim, dtype, aux = table_shape[name]
+            chunks = [f.result() for f in futs]
+            nbytes += sum(c.nbytes for c in chunks)
+            tables[name] = self.enc._make_table_record(rows, dim, dtype, aux,
+                                                       qcfg, chunks)
+        dense: Dict[str, mf.DenseRecord] = {}
+        for key_name, fut in dense_futs.items():
+            dense[key_name] = fut.result()
+            nbytes += dense[key_name].nbytes
+
+        part = mf.PartManifest(
+            step=step, host=self.host, num_hosts=self.num_hosts,
+            tables=tables, dense=dense, nbytes_total=nbytes,
+            created_unix=time.time())
+        mf.publish_part(self.store, part)  # the phase-1 vote
+
+        st = pipe.stats
+        self.stats = dict(
+            host=self.host, items=st.items, payload_bytes=st.payload_bytes,
+            quantize_s=quant_s, encode_busy_s=st.encode_busy_s,
+            write_busy_s=st.write_busy_s, wall_s=st.wall_s,
+            occupancy=st.occupancy(pipe.encode_workers, pipe.write_workers))
+        return part
+
+
+def run_host_writers(writers: List[HostShardWriter], snap, decision: str,
+                     qcfg, cum, unc) -> List[mf.PartManifest]:
+    """Run every host's write concurrently (simulated hosts = threads).
+    The first real failure sets the shared cancel event, so surviving hosts
+    abort at their next pipeline checkpoint instead of finishing doomed
+    shards (and publishing votes the retry would have to purge). Waits for
+    all hosts to settle, then re-raises the root failure, preferring a real
+    error over a derived CheckpointCancelled so a host crash is never
+    misreported as a cancellation."""
+    def guarded(w: HostShardWriter):
+        try:
+            return w.write_part(snap, decision, qcfg, cum, unc)
+        except CheckpointCancelled:
+            raise
+        except BaseException:
+            if w.cancel is not None:
+                w.cancel.set()  # fail fast: per-save event, reset next save
+            raise
+
+    with ThreadPoolExecutor(max_workers=len(writers),
+                            thread_name_prefix="cnr-host") as pool:
+        futs = [pool.submit(guarded, w) for w in writers]
+        excs = [f.exception() for f in futs]
+    root = None
+    for e in excs:
+        if e is not None and not isinstance(e, CheckpointCancelled):
+            root = e
+            break
+    if root is None:
+        root = next((e for e in excs if e is not None), None)
+    if root is not None:
+        raise root
+    return [f.result() for f in futs]

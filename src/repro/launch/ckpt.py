@@ -4,6 +4,7 @@
   PYTHONPATH=src python -m repro.launch.ckpt show   --dir /ckpts/job-1 --step 12000
   PYTHONPATH=src python -m repro.launch.ckpt verify --dir /ckpts/job-1   # fsck
   PYTHONPATH=src python -m repro.launch.ckpt gc     --dir /ckpts/job-1 --keep 2
+  PYTHONPATH=src python -m repro.launch.ckpt gc-aborted --dir /ckpts/job-1
 """
 
 from __future__ import annotations
@@ -15,7 +16,8 @@ import time
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("cmd", choices=["list", "show", "verify", "gc"])
+    ap.add_argument("cmd", choices=["list", "show", "verify", "gc",
+                                    "gc-aborted"])
     ap.add_argument("--dir", required=True)
     ap.add_argument("--step", type=int, default=None)
     ap.add_argument("--keep", type=int, default=1)
@@ -25,6 +27,18 @@ def main(argv=None):
     from ..core import manifest as mf
 
     store = LocalFSStore(args.dir)
+
+    if args.cmd == "gc-aborted":
+        # reclaim chunk/part debris of crashed or cancelled saves; only run
+        # while no writer is active (the manager does this automatically
+        # after each committed save)
+        reclaimed = mf.gc_aborted(store)
+        for s, n in reclaimed.items():
+            print(f"step {s}: reclaimed {n} orphaned blobs")
+        print("nothing to reclaim" if not reclaimed else
+              f"reclaimed {len(reclaimed)} aborted saves")
+        return 0
+
     steps = mf.list_steps(store)
     if not steps:
         print("no valid checkpoints")
@@ -45,6 +59,15 @@ def main(argv=None):
         print(f"step {m.step} ({m.kind}); base={m.base_step} prev={m.prev_step}")
         print(f"policy: {m.policy.get('name')}  quant: {m.quant}")
         print(f"total bytes: {m.nbytes_total:,}  wall: {m.wall_time_s:.2f}s")
+        if m.shards:
+            hosts = mf.list_part_hosts(store, m.step)
+            print(f"sharded: {m.shards['num_hosts']} hosts "
+                  f"({len(hosts)} parts durable)")
+            for p in m.shards["parts"]:
+                part = mf.load_part(store, m.step, p["host"])
+                print(f"  host {p['host']:>3}: {part.nbytes_total:,} bytes "
+                      f"in {sum(len(r.chunks) for r in part.tables.values())}"
+                      f" chunks")
         chain = mf.recovery_chain(store, s)
         print(f"recovery chain: {[c.step for c in chain]}")
         for name, rec in m.tables.items():
@@ -55,9 +78,22 @@ def main(argv=None):
         return 0
 
     if args.cmd == "verify":
-        bad = 0
+        total_bad = 0
         for s in steps:
+            bad = 0
             m = mf.load(store, s)
+            for p in (m.shards or {}).get("parts", ()):
+                # two-phase invariant: a committed sharded manifest implies
+                # every host's part manifest is durable and unmodified
+                try:
+                    raw = store.get(p["key"])
+                except FileNotFoundError:
+                    print(f"MISSING PART {p['key']}")
+                    bad += 1
+                    continue
+                if ObjectStore.checksum(raw) != p["crc32"]:
+                    print(f"CORRUPT PART {p['key']}")
+                    bad += 1
             for name, rec in m.tables.items():
                 for ch in rec.chunks:
                     try:
@@ -80,7 +116,8 @@ def main(argv=None):
                     print(f"CORRUPT {rec.key}")
                     bad += 1
             print(f"step {s}: {'OK' if bad == 0 else f'{bad} problems'}")
-        return 1 if bad else 0
+            total_bad += bad
+        return 1 if total_bad else 0
 
     if args.cmd == "gc":
         deleted = mf.apply_retention(store, keep_latest=args.keep)

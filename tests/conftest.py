@@ -9,7 +9,35 @@ are skipped.
 import sys
 import types
 
+import numpy as np
 import pytest
+
+
+@pytest.fixture
+def tiny_snapshot():
+    """Factory for tiny default-shaped snapshots — the standard fast-CI
+    workload for checkpoint-path tests. Shapes stay small (hundreds of rows,
+    single-digit dims) so sharded/fault-injection tests run in milliseconds;
+    ragged row counts across tables exercise uneven shard bounds."""
+    from repro.core.snapshot import Snapshot
+
+    def make(step=1, rows=300, dim=8, tables=2, seed=0, touched=None,
+             with_dense=True, with_aux=True):
+        rng = np.random.default_rng(seed)
+        tabs = {f"emb{i}": rng.normal(size=(rows + 37 * i, dim))
+                .astype(np.float32) for i in range(tables)}
+        row_state = {n: ({"acc": np.abs(rng.normal(size=t.shape[0]))
+                          .astype(np.float32)} if with_aux else {})
+                     for n, t in tabs.items()}
+        if touched is None:
+            touched = {n: np.ones(t.shape[0], bool) for n, t in tabs.items()}
+        dense = ({"mlp/w": rng.normal(size=(16, 16)).astype(np.float32),
+                  "mlp/b": rng.normal(size=(16,)).astype(np.float32)}
+                 if with_dense else {})
+        return Snapshot(step=step, tables=tabs, row_state=row_state,
+                        touched=touched, dense=dense, extra={})
+
+    return make
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401

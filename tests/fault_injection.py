@@ -1,0 +1,107 @@
+"""Fault-injection store wrappers for crash-consistency testing.
+
+:class:`FailingStore` wraps any ObjectStore and kills writes matching a key
+predicate after N successful matching puts — simulating one host of a
+sharded save dying mid-checkpoint at a chosen point (during its chunk
+writes, or exactly at its part-manifest vote). Reads are never failed, so
+the surviving state can always be inspected and restored.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Iterable, Optional
+
+from repro.core import manifest as mf
+from repro.core.storage import ObjectStore
+
+
+class InjectedWriteError(IOError):
+    """The injected failure — a distinct type so tests can assert the crash
+    path reports the root cause, not a derived error."""
+
+
+def host_keys(host: int) -> Callable[[str], bool]:
+    """Predicate matching every key a given simulated host writes: its chunk
+    namespace and its part manifest."""
+    chunk_tag = f"/host_{host:04d}/"
+    part_tag = f"/host_{host:04d}.json"
+
+    def match(key: str) -> bool:
+        return chunk_tag in key or key.endswith(part_tag)
+
+    return match
+
+
+class FailingStore(ObjectStore):
+    """Wraps ``inner``; the (fail_after+1)-th put whose key satisfies
+    ``match`` — and every matching put thereafter — raises
+    :class:`InjectedWriteError`. ``fail_after=0`` kills the host's first
+    write; a large value lets the chunks land and kills the part-manifest
+    vote. Thread-safe (hosts write from worker threads)."""
+
+    def __init__(self, inner: ObjectStore,
+                 match: Optional[Callable[[str], bool]] = None,
+                 fail_after: Optional[int] = None) -> None:
+        super().__init__()
+        self.inner = inner
+        self.counters = inner.counters
+        self.match = match or (lambda key: True)
+        self.fail_after = fail_after  # None → armed off
+        self.matching_puts = 0
+        self.failed_keys: list = []
+        self._lock = threading.Lock()
+
+    def arm(self, match: Callable[[str], bool], fail_after: int) -> None:
+        with self._lock:
+            self.match = match
+            self.fail_after = fail_after
+            self.matching_puts = 0
+            self.failed_keys = []
+
+    def disarm(self) -> None:
+        with self._lock:
+            self.fail_after = None
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            if self.fail_after is not None and self.match(key):
+                if self.matching_puts >= self.fail_after:
+                    self.failed_keys.append(key)
+                    raise InjectedWriteError(f"injected write failure: {key}")
+                self.matching_puts += 1
+        self.inner.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        return self.inner.get(key)
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def list(self, prefix: str = "") -> Iterable[str]:
+        return self.inner.list(prefix)
+
+    def exists(self, key: str) -> bool:
+        return self.inner.exists(key)
+
+    def size(self, key: str) -> int:
+        return self.inner.size(key)
+
+
+def assert_no_torn_manifests(store: ObjectStore) -> None:
+    """The two-phase commit invariant: every committed sharded manifest has
+    ALL its part manifests durable and every referenced chunk present."""
+    for step in mf.list_steps(store):
+        man = mf.load(store, step)
+        if man.shards is None:
+            continue
+        n = man.shards["num_hosts"]
+        hosts = mf.list_part_hosts(store, step)
+        assert hosts == list(range(n)), (
+            f"committed manifest {step} missing parts: have {hosts}, "
+            f"need {n}")
+        for rec in man.tables.values():
+            for ch in rec.chunks:
+                assert store.exists(ch.key), f"missing chunk {ch.key}"
+        for drec in man.dense.values():
+            assert store.exists(drec.key), f"missing dense {drec.key}"

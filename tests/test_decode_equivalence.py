@@ -11,6 +11,10 @@ import pytest
 from repro.configs import _module
 from repro.models import transformer as T
 
+# multi-minute training-stack tests: excluded from the fast CI set
+# (`-m "not slow"`), exercised by the scheduled full job
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "minicpm3-4b", "olmoe-1b-7b"])
 def test_decode_matches_full_forward(arch):

@@ -9,6 +9,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# multi-minute training-stack tests: excluded from the fast CI set
+# (`-m "not slow"`), exercised by the scheduled full job
+pytestmark = pytest.mark.slow
+
 
 def _run(code: str):
     env = dict(os.environ)

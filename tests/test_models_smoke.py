@@ -8,6 +8,10 @@ import pytest
 from repro.configs import ARCHS, arch_shapes, get_cell
 from repro.data.cells import batch_for_cell
 
+# multi-minute training-stack tests: excluded from the fast CI set
+# (`-m "not slow"`), exercised by the scheduled full job
+pytestmark = pytest.mark.slow
+
 CELLS = [(a, s) for a in ARCHS for s in arch_shapes(a)]
 
 

@@ -4,6 +4,10 @@
 import numpy as np
 import pytest
 
+# multi-minute training-stack tests: excluded from the fast CI set
+# (`-m "not slow"`), exercised by the scheduled full job
+pytestmark = pytest.mark.slow
+
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 

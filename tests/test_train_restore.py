@@ -17,6 +17,10 @@ from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, PAPER_
 from repro.data.cells import batch_for_cell
 from repro.train.loop import SimulatedFailure, Trainer, TrainerConfig
 
+# multi-minute training-stack tests: excluded from the fast CI set
+# (`-m "not slow"`), exercised by the scheduled full job
+pytestmark = pytest.mark.slow
+
 
 def flat_params(state):
     leaves = jax.tree_util.tree_flatten_with_path(state.params)[0]
