@@ -3,7 +3,7 @@
 from .bitwidth import BitwidthController, expected_failures, select_bits
 from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
 from .coordinator import CommitCoordinator, ShardCommitError
-from .pipeline import PipelineStats, WritePipeline
+from .pipeline import PipelineStats, RestorePipeline, StagePipeline, WritePipeline
 from .incremental import (
     ConsecutiveIncrement,
     FullOnly,

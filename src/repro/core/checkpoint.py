@@ -9,17 +9,24 @@ Orchestrates the paper's three-stage workflow (§3.4):
   3. write to the object store through a bounded encode→write pipeline
      (``repro.core.pipeline``), then atomically commit the manifest
 
-plus recovery (baseline + increment replay, parallel chunk fetch + dequant),
-retention, non-overlapping write scheduling with cancellation (straggler
-mitigation, §3.3), and dynamic bit-width fallback (§5.2.1).
+plus recovery (baseline + increment replay through a streaming
+fetch→decode→apply pipeline), retention, non-overlapping write scheduling
+with cancellation (straggler mitigation, §3.3), and dynamic bit-width
+fallback (§5.2.1).
 
 Write-path threading model (see docs/write_path.md):
 
-  trainer thread ──save()──▶ writer thread (quantize tables, feed pipeline)
+  trainer thread ──save()──▶ writer thread (select rows, feed pipeline)
                                   │ submit chunks, bounded window
-                                  ├──▶ N encode workers (pack bits, layout,
-                                  │        checksum — CPU)
+                                  ├──▶ N encode workers (fused device
+                                  │        quantize+pack, layout, checksum)
                                   └──▶ M upload workers (store.put — IO)
+
+Restore threading model: every chunk of the whole recovery chain streams
+through a bounded fetch→decode→apply pipeline — increments prefetch while
+the baseline is still dequantizing, decode runs on parallel workers, and a
+single ordered applier preserves chain-replay overwrite order. In-flight
+memory is O(pipeline window), not O(checkpoint).
 """
 
 from __future__ import annotations
@@ -40,7 +47,7 @@ from . import tracker
 from .bitwidth import BitwidthController
 from .coordinator import CommitCoordinator
 from .incremental import IncrementalPolicy, make_policy
-from .pipeline import WritePipeline
+from .pipeline import RestorePipeline, WritePipeline
 from .quantize import (
     PAPER_DEFAULTS,
     QuantConfig,
@@ -49,7 +56,7 @@ from .quantize import (
     quantize,
 )
 from .snapshot import Snapshot
-from .storage import CheckpointCancelled, ObjectStore, run_parallel
+from .storage import CheckpointCancelled, ObjectStore
 
 META_DTYPE = np.float16  # fp16 scale/zero metadata (halves per-row overhead)
 
@@ -70,12 +77,15 @@ class CheckpointConfig:
                                            # aux (AdaGrad acc) per chunk (8-bit)
     # ---- write/restore engine (docs/write_path.md) ----
     pipeline: bool = True                  # False → window of 1 (serial order)
-    encode_workers: int = 2                # chunk encode (pack/checksum) threads
+    encode_workers: int = 2                # chunk quantize+pack/checksum threads
     write_workers: int = 4                 # store.put threads
     max_inflight_chunks: Optional[int] = None  # encoded-payload window bound
-    quant_batch_rows: Optional[int] = None     # rows per quant dispatch
-                                               # (default 8 × chunk_rows)
-    restore_workers: int = 4               # parallel chunk fetch + dequant
+    fused_pack: bool = True                # device-side bit packing (fused
+                                           # kernel / jnp); False → host
+                                           # pack_bits fallback, same bytes
+    restore_workers: int = 4               # parallel chunk fetch threads
+    decode_workers: int = 2                # parallel unpack+dequant threads
+    restore_inflight: Optional[int] = None  # fetched-chunk window bound
     quant_impl: str = "auto"               # kernels/adaptive_quant impl knob
     # ---- sharded multi-host writers (docs/sharded_writers.md) ----
     num_hosts: int = 1                     # >1 → per-host shard writers with
@@ -106,6 +116,24 @@ class RestoredState:
     dense: Dict[str, np.ndarray]
     extra: Dict[str, Any]
     chain_len: int
+    # restore-pipeline counters (wall_s, payload_bytes, occupancy per stage)
+    stats: Optional[dict] = None
+
+
+class _QuantClock:
+    """Thread-safe accumulator for device quantize(+pack) seconds — the
+    encode stage runs quantization on several workers, so per-chunk timings
+    need a shared sink."""
+
+    __slots__ = ("seconds", "_lock")
+
+    def __init__(self) -> None:
+        self.seconds = 0.0
+        self._lock = threading.Lock()
+
+    def add(self, dt: float) -> None:
+        with self._lock:
+            self.seconds += dt
 
 
 class CheckNRunManager:
@@ -219,47 +247,55 @@ class CheckNRunManager:
             return self.bitwidth.current_config()
         return self.config.quant
 
-    # ----------------------------------------------------- batch quantization
-    _adaptive_quant_op = None  # class-level cache for the lazy kernel import
+    # ------------------------------------------------------ chunk quantization
+    _quant_ops = None  # class-level cache for the lazy kernel import
 
     @classmethod
-    def _kernel_adaptive_quant(cls):
+    def _kernel_quant_ops(cls):
         """Lazy import: pulls in the kernels package (and its model deps)
-        only when an adaptive config is actually used."""
-        if cls._adaptive_quant_op is None:
+        only when a quantized config is actually used. Returns
+        (quant_pack, quant_codes) or None."""
+        if cls._quant_ops is None:
             try:
-                from ..kernels.adaptive_quant import adaptive_quant
-                cls._adaptive_quant_op = adaptive_quant
+                from ..kernels.adaptive_quant import quant_codes, quant_pack
+                cls._quant_ops = (quant_pack, quant_codes)
             except ImportError:
                 # missing optional dep in this environment → jnp fallback;
                 # real kernel bugs (anything else) must surface, not be
                 # silently masked by the per-table numpy path
-                cls._adaptive_quant_op = False
-        return cls._adaptive_quant_op or None
+                cls._quant_ops = False
+        return cls._quant_ops or None
 
-    def _quantize_selection(self, tab: np.ndarray, sel: np.ndarray,
-                            qcfg: Optional[QuantConfig], contiguous: bool):
-        """Quantize one batch of selected rows in a single call (one kernel
-        dispatch + one device→host copy per quant batch, instead of one per
-        chunk). Returns (codes u8, scale f32, zero f32) or None."""
-        if qcfg is None or len(sel) == 0:
-            return None
-        if contiguous:  # full-checkpoint batches are ascending ranges
-            rows_arr = tab[int(sel[0]):int(sel[-1]) + 1]
-        else:
-            rows_arr = tab[sel]
-        q: Optional[Quantized] = None
-        if qcfg.method == "adaptive":
-            op = self._kernel_adaptive_quant()
-            if op is not None:
-                import jax.numpy as jnp
-                q = op(jnp.asarray(rows_arr, dtype=jnp.float32),
-                       bits=qcfg.bits, num_bins=qcfg.num_bins,
-                       ratio=qcfg.ratio, impl=self.config.quant_impl)
-        if q is None:
-            q = quantize(rows_arr, qcfg)
-        return (np.asarray(q.codes), np.asarray(q.scale, dtype=np.float32),
-                np.asarray(q.zero, dtype=np.float32))
+    def _quant_encode(self, rows_arr: np.ndarray, qcfg: QuantConfig):
+        """Quantize + bit-pack one chunk of rows. Returns (scale f32,
+        zero f32, packed-codes payload bytes).
+
+        Fast path (``fused_pack``): the fused kernel/jitted-jnp op emits the
+        packed word stream on device — only ``bits/8`` bytes per code cross
+        to the host and the encode stage shrinks to header assembly. The
+        host fallback (``fused_pack=False`` or unsupported method) runs the
+        SAME quantizer where available, then ``packing.pack_bits``; both
+        paths produce byte-identical payloads."""
+        ops = self._kernel_quant_ops()
+        if ops is not None and qcfg.method in ("adaptive", "uniform_asym"):
+            quant_pack_op, quant_codes_op = ops
+            import jax.numpy as jnp
+            xj = jnp.asarray(rows_arr, dtype=jnp.float32)
+            kw = dict(bits=qcfg.bits, method=qcfg.method,
+                      num_bins=qcfg.num_bins, ratio=qcfg.ratio,
+                      impl=self.config.quant_impl)
+            if self.config.fused_pack:
+                pq = quant_pack_op(xj, **kw)
+                return (np.asarray(pq.scale), np.asarray(pq.zero),
+                        packing.words_to_payload(np.asarray(pq.words),
+                                                 pq.count, qcfg.bits))
+            q = quant_codes_op(xj, **kw)
+            return (np.asarray(q.scale), np.asarray(q.zero),
+                    packing.pack_bits(np.asarray(q.codes), qcfg.bits))
+        q = quantize(rows_arr, qcfg)
+        return (np.asarray(q.scale, dtype=np.float32),
+                np.asarray(q.zero, dtype=np.float32),
+                packing.pack_bits(np.asarray(q.codes), qcfg.bits))
 
     # ------------------------------------------------- shared write plumbing
     def _make_pipeline(self, cancel, deadline) -> WritePipeline:
@@ -276,40 +312,28 @@ class CheckNRunManager:
     def _submit_table_chunks(self, pipe: WritePipeline, name: str,
                              tab: np.ndarray, sel: np.ndarray, aux,
                              qcfg: Optional[QuantConfig], full: bool,
-                             key_prefix: str) -> Tuple[List[Future], float]:
-        """Stage 0 (writer/host thread): batched quantization, a few chunks
-        per kernel dispatch — bounds host memory to O(quant batch) while
-        amortizing dispatch + device→host copies; overlaps with encode/write
-        of previously submitted chunks. The ONE implementation of the chunk
-        byte format's emission — single-host and per-host shard writers both
-        go through here (key_prefix is the only difference), which is what
-        keeps their restores byte-identical. Returns (chunk futures,
-        quantize seconds)."""
+                             key_prefix: str,
+                             clock: Optional[_QuantClock] = None
+                             ) -> List[Future]:
+        """Stage 0 (writer/host thread): slice the selection into chunks and
+        submit one encode→write job per chunk. Quantization happens INSIDE
+        the encode jobs (one fused dispatch per chunk), so it parallelizes
+        across encode workers and overlaps uploads — the writer thread only
+        feeds the window. The ONE implementation of the chunk byte format's
+        emission — single-host and per-host shard writers both go through
+        here (key_prefix is the only difference), which is what keeps their
+        restores byte-identical. Returns the chunk futures; device quantize
+        seconds accumulate into ``clock``."""
         cfg = self.config
-        qbatch = cfg.quant_batch_rows or 8 * cfg.chunk_rows
-        qbatch = max(cfg.chunk_rows, qbatch // cfg.chunk_rows * cfg.chunk_rows)
         futs: List[Future] = []
-        quant_s = 0.0
-        seq = 0
-        for qlo in range(0, len(sel), qbatch):
-            bsel = sel[qlo: qlo + qbatch]
-            t0 = time.monotonic()
-            qenc = self._quantize_selection(tab, bsel, qcfg, contiguous=full)
-            quant_s += time.monotonic() - t0
-            for blo in range(0, len(bsel), cfg.chunk_rows):
-                bhi = min(blo + cfg.chunk_rows, len(bsel))
-                idx = bsel[blo:bhi]
-                q_slice = (None if qenc is None else
-                           (qenc[0][blo:bhi], qenc[1][blo:bhi],
-                            qenc[2][blo:bhi]))
-                key = f"{key_prefix}{name}/{seq:06d}.bin"
-                seq += 1
-                encode_fn = functools.partial(
-                    self._encode_chunk_job, key, tab, idx, aux, qcfg, full,
-                    q_slice)
-                write_fn = functools.partial(self.store.put, key)
-                futs.append(pipe.submit(encode_fn, write_fn))
-        return futs, quant_s
+        for seq, blo in enumerate(range(0, len(sel), cfg.chunk_rows)):
+            idx = sel[blo: blo + cfg.chunk_rows]
+            key = f"{key_prefix}{name}/{seq:06d}.bin"
+            encode_fn = functools.partial(
+                self._encode_chunk_job, key, tab, idx, aux, qcfg, full, clock)
+            write_fn = functools.partial(self.store.put, key)
+            futs.append(pipe.submit(encode_fn, write_fn))
+        return futs
 
     def _make_table_record(self, rows: int, dim: int, dtype: str, aux,
                            qcfg: Optional[QuantConfig],
@@ -337,7 +361,7 @@ class CheckNRunManager:
                     if cfg.write_deadline_s else None)
         pipe = self._make_pipeline(cancel, deadline)
 
-        quant_s = 0.0
+        clock = _QuantClock()
         table_futs: Dict[str, List[Future]] = {}
         table_shape: Dict[str, Tuple[int, int, str, Dict[str, np.ndarray]]] = {}
         dense_futs: Dict[str, Future] = {}
@@ -346,11 +370,9 @@ class CheckNRunManager:
                 rows, dim = tab.shape
                 sel = self._select_rows(decision, name, rows, cum, unc)
                 aux = snap.row_state.get(name, {})
-                futs, q_s = self._submit_table_chunks(
+                table_futs[name] = self._submit_table_chunks(
                     pipe, name, tab, sel, aux, qcfg, decision == "full",
-                    mf.chunk_prefix(step))
-                quant_s += q_s
-                table_futs[name] = futs
+                    mf.chunk_prefix(step), clock)
                 table_shape[name] = (rows, dim, str(tab.dtype), aux)
 
             for key_name, arr in snap.dense.items():
@@ -396,15 +418,16 @@ class CheckNRunManager:
         self._post_commit(step, decision, total_bytes)
         return SaveResult(
             step=step, kind=decision, nbytes=total_bytes,
-            build_time_s=quant_s + stats.encode_busy_s,
+            # quantization runs inside the encode stage now, so its busy
+            # seconds are a SUBSET of encode_busy_s (quantize_s reports it)
+            build_time_s=stats.encode_busy_s,
             write_time_s=stats.write_busy_s,
             pipeline_stats=dict(
                 items=stats.items, payload_bytes=stats.payload_bytes,
                 encode_busy_s=stats.encode_busy_s,
                 write_busy_s=stats.write_busy_s,
-                quantize_s=quant_s, wall_s=stats.wall_s,
-                occupancy=stats.occupancy(pipe.encode_workers,
-                                          pipe.write_workers)))
+                quantize_s=clock.seconds, wall_s=stats.wall_s,
+                occupancy=pipe.occupancy()))
 
     def _post_commit(self, step: int, decision: str, nbytes: int) -> None:
         """Bookkeeping once the manifest is durable: advance the policy,
@@ -490,8 +513,9 @@ class CheckNRunManager:
         per_host = [w.stats for w in writers]
         return SaveResult(
             step=step, kind=decision, nbytes=man.nbytes_total,
-            build_time_s=sum(s["quantize_s"] + s["encode_busy_s"]
-                             for s in per_host),
+            # quantize_s is a subset of encode_busy_s (quant runs inside
+            # the encode stage), so it is NOT added on top
+            build_time_s=sum(s["encode_busy_s"] for s in per_host),
             write_time_s=sum(s["write_busy_s"] for s in per_host),
             pipeline_stats=dict(
                 num_hosts=cfg.num_hosts,
@@ -504,9 +528,9 @@ class CheckNRunManager:
                 per_host=per_host))
 
     # ---------------------------------------------------------- encode stage
-    def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, q_slice):
+    def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, clock):
         payload, sections = self._encode_chunk(tab, idx, aux, qcfg, full,
-                                               q_slice)
+                                               clock)
         row_range = ([int(idx[0]), int(idx[-1]) + 1]
                      if full and len(idx) else None)
         rec = mf.ChunkRecord(
@@ -524,13 +548,13 @@ class CheckNRunManager:
 
     def _encode_chunk(self, tab: np.ndarray, idx: np.ndarray,
                       aux: Dict[str, np.ndarray], qcfg: Optional[QuantConfig],
-                      full: bool, q_slice=None):
+                      full: bool, clock: Optional[_QuantClock] = None):
         """Serialize one chunk of rows: [indices?][scale][zero][codes][aux...]
         (full-checkpoint chunks are contiguous → range-encoded, no indices).
 
-        ``q_slice``: this chunk's (codes, scale, zero) views into the
-        table-level batched quantization; when None the chunk quantizes
-        itself (compat path)."""
+        With the fused quantize+pack path the quantized sections arrive
+        packed from the device, so this reduces to header assembly: section
+        offsets, fp16 metadata casts, and the aux encodings."""
         parts = []
         sections: Dict[str, list] = {}
         off = 0
@@ -544,18 +568,19 @@ class CheckNRunManager:
         if not full:
             add("indices", np.ascontiguousarray(idx, dtype=np.uint32).tobytes())
         if qcfg is not None and len(idx):
-            if q_slice is None:
-                q: Quantized = quantize(tab[idx], qcfg)
-                codes, scale, zero = (np.asarray(q.codes),
-                                      np.asarray(q.scale), np.asarray(q.zero))
-            else:
-                codes, scale, zero = q_slice
+            # full-checkpoint chunks are ascending ranges → contiguous view
+            rows_arr = (tab[int(idx[0]):int(idx[-1]) + 1] if full
+                        else tab[idx])
+            t0 = time.monotonic()
+            scale, zero, codes_payload = self._quant_encode(rows_arr, qcfg)
+            if clock is not None:
+                clock.add(time.monotonic() - t0)
             # fp16 quantization metadata (beyond-paper: the paper flags its
             # metadata structure as unoptimized; fp16 scale/zero costs <1e-3
             # relative dequant error and halves the per-row overhead)
             add("scale", np.asarray(scale, dtype=META_DTYPE).tobytes())
             add("zero", np.asarray(zero, dtype=META_DTYPE).tobytes())
-            add("codes", packing.pack_bits(codes, qcfg.bits))
+            add("codes", codes_payload)
         else:
             add("values", np.ascontiguousarray(tab[idx], dtype=np.float32).tobytes())
         for a_name, a_arr in aux.items():
@@ -583,14 +608,15 @@ class CheckNRunManager:
 
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
-        for man in chain:  # chain order matters: later manifests overwrite
-            for name, rec in man.tables.items():
-                if name not in tables:
-                    tables[name] = np.zeros((rec.rows, rec.dim), dtype=np.float32)
-                    row_state[name] = {}  # allocated lazily (aux width varies)
-                self._apply_table(tables[name], row_state[name], rec, man)
+        dense: Dict[str, np.ndarray] = {}
+
+        def alloc(name: str, rec: mf.TableRecord):
+            return np.zeros((rec.rows, rec.dim), dtype=np.float32), 0
+
+        stats = self._replay_chain(
+            [(man, man.tables) for man in chain], chain[-1],
+            tables, row_state, dense, alloc)
         final = chain[-1]
-        dense = self._restore_dense(final)
         # Resync host bookkeeping + policy so saves after restore are coherent.
         self.policy.load_dict(final.policy)
         if self.bitwidth is not None and final.extra.get("bitwidth"):
@@ -600,7 +626,8 @@ class CheckNRunManager:
             self._cum_touched = {}
             self._uncommitted = {}
         return RestoredState(step=final.step, tables=tables, row_state=row_state,
-                             dense=dense, extra=final.extra, chain_len=len(chain))
+                             dense=dense, extra=final.extra,
+                             chain_len=len(chain), stats=stats)
 
     def restore_part(self, host: int, step: Optional[int] = None) -> RestoredState:
         """Lazily shard-read ONE host's row-shard of a sharded checkpoint:
@@ -635,64 +662,91 @@ class CheckNRunManager:
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
         ranges: Dict[str, List[int]] = {}
-        for man in chain:
-            part = mf.load_part(store, man.step, host)
-            for name, rec in part.tables.items():
-                if name not in tables:
-                    # shard-sized scratch: a host's chunks only reference
-                    # rows in its range, scattered at offset -lo — memory
-                    # stays O(shard), not O(table)
-                    lo, hi = row_shard_bounds(rec.rows, num_hosts)[host]
-                    ranges[name] = [lo, hi]
-                    tables[name] = np.zeros((hi - lo, rec.dim), np.float32)
-                    row_state[name] = {}
-                self._apply_table(tables[name], row_state[name], rec, man,
-                                  row_offset=ranges[name][0])
+        parts = [mf.load_part(store, man.step, host) for man in chain]
 
-        dense = self._restore_dense(final)
+        def alloc(name: str, rec: mf.TableRecord):
+            # shard-sized scratch: a host's chunks only reference rows in
+            # its range, scattered at offset -lo — memory stays O(shard),
+            # not O(table)
+            lo, hi = row_shard_bounds(rec.rows, num_hosts)[host]
+            ranges[name] = [lo, hi]
+            return np.zeros((hi - lo, rec.dim), np.float32), lo
+
+        dense: Dict[str, np.ndarray] = {}
+        stats = self._replay_chain(
+            [(man, part.tables) for man, part in zip(chain, parts)],
+            final, tables, row_state, dense, alloc)
         extra = dict(final.extra)
         extra["shard"] = {"host": host, "num_hosts": num_hosts,
                           "row_range": ranges}
         return RestoredState(step=final.step, tables=tables,
                              row_state=row_state, dense=dense, extra=extra,
-                             chain_len=len(chain))
+                             chain_len=len(chain), stats=stats)
 
-    def _restore_dense(self, man: mf.Manifest) -> Dict[str, np.ndarray]:
-        """Fetch + checksum + decode a manifest's dense params in parallel
-        (dense is global, shared by restore() and restore_part())."""
-        dense: Dict[str, np.ndarray] = {}
-        keys = [rec.key for rec in man.dense.values()]
-        blobs = self.store.get_many(keys,
-                                    max_workers=self.config.restore_workers)
-        for (key_name, rec), data in zip(man.dense.items(), blobs):
-            if ObjectStore.checksum(data) != rec.crc32:
-                raise IOError(f"checksum mismatch for {rec.key}")
-            dense[key_name] = np.frombuffer(
-                data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
-        return dense
+    # ------------------------------------------------- streaming chain replay
+    def _replay_chain(self, chain_records, final_man: mf.Manifest,
+                      tables: Dict[str, np.ndarray],
+                      row_state: Dict[str, Dict[str, np.ndarray]],
+                      dense: Dict[str, np.ndarray], alloc_fn) -> dict:
+        """Stream every chunk of the recovery chain through one bounded
+        fetch→decode→apply pipeline (docs/write_path.md, "decode path").
 
-    def _apply_table(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
-                     rec: mf.TableRecord, man: mf.Manifest,
-                     row_offset: int = 0) -> None:
-        """Fetch + decode + scatter one manifest's chunks for one table.
-        Chunks within a manifest cover disjoint rows, so they decode and
-        scatter concurrently on ``restore_workers`` threads. ``row_offset``
-        shifts the chunks' global row indices into a shard-local ``out``
-        (restore_part); 0 means ``out`` covers the whole table."""
-        chunks = [ch for ch in rec.chunks if ch.n_rows > 0]
-        if not chunks:
-            return
-        aux_lock = threading.Lock()
-        run_parallel([functools.partial(self._apply_chunk, out, aux_out,
-                                        aux_lock, rec, ch, row_offset)
-                      for ch in chunks],
-                     self.config.restore_workers, "cnr-restore")
+        All manifests' chunks are submitted up front (the window bounds
+        in-flight memory to O(window)), so increment chunks prefetch from
+        the store while the baseline is still being dequantized and
+        applied. Fetch and decode run concurrently and out of order; the
+        single ordered applier scatters in submission order, which IS chain
+        order — a later manifest's rows always overwrite an earlier one's.
+        ``chain_records`` is ``[(manifest, {name: TableRecord})]`` (part
+        manifests' records for shard reads); ``alloc_fn(name, rec) ->
+        (array, row_offset)`` sizes the output (whole table or one shard).
+        The final manifest's dense params ride the same pipeline.
+        """
+        cfg = self.config
+        pipe = RestorePipeline(fetch_workers=cfg.restore_workers,
+                               decode_workers=cfg.decode_workers,
+                               max_inflight=cfg.restore_inflight)
+        offsets: Dict[str, int] = {}
+        try:
+            for man, records in chain_records:
+                for name, rec in records.items():
+                    if name not in tables:
+                        tables[name], offsets[name] = alloc_fn(name, rec)
+                        row_state[name] = {}  # aux allocated lazily (width
+                        #                       varies by checkpoint config)
+                    out = tables[name]
+                    aux_out = row_state[name]
+                    off = offsets[name]
+                    for ch in rec.chunks:
+                        if ch.n_rows == 0:
+                            continue
+                        pipe.submit(
+                            functools.partial(self.store.get, ch.key),
+                            functools.partial(self._decode_chunk, rec, ch),
+                            functools.partial(self._apply_decoded, out,
+                                              aux_out, rec, ch, off))
+            for key_name, drec in final_man.dense.items():
+                pipe.submit(
+                    functools.partial(self.store.get, drec.key),
+                    functools.partial(self._decode_dense, drec),
+                    functools.partial(dense.__setitem__, key_name))
+            pipe.drain()
+        finally:
+            pipe.close()
+        return dict(items=pipe.stats.items,
+                    payload_bytes=pipe.stats.payload_bytes,
+                    wall_s=pipe.stats.wall_s,
+                    busy={k: round(v, 6)
+                          for k, v in pipe.stats.busy.items()},
+                    occupancy={k: round(v, 4)
+                               for k, v in pipe.occupancy().items()})
 
-    def _apply_chunk(self, out: np.ndarray, aux_out: Dict[str, np.ndarray],
-                     aux_lock: threading.Lock, rec: mf.TableRecord,
-                     ch: mf.ChunkRecord, row_offset: int = 0) -> None:
+    # ---------------------------------------------------------- decode stage
+    def _decode_chunk(self, rec: mf.TableRecord, ch: mf.ChunkRecord,
+                      data: bytes):
+        """Checksum + unpack + dequantize one chunk (decode workers, CPU).
+        Returns (global row idx, row values, {aux: (vals, width, dtype)})."""
         dim = rec.dim
-        data = self.store.get(ch.key)
         if ObjectStore.checksum(data) != ch.crc32:
             raise IOError(f"checksum mismatch for {ch.key}")
         if "indices" in ch.sections:
@@ -701,8 +755,6 @@ class CheckNRunManager:
         else:
             lo, hi = ch.row_range
             idx = np.arange(lo, hi, dtype=np.int64)
-        if row_offset:
-            idx = idx - row_offset
         if "values" in ch.sections:
             o, n = ch.sections["values"]
             vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
@@ -719,7 +771,7 @@ class CheckNRunManager:
             codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
             q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
             vals = np.asarray(dequantize(q))
-        out[idx] = vals
+        aux: Dict[str, Tuple[np.ndarray, int, np.dtype]] = {}
         for a_name, a_dt in rec.row_state.items():
             sec8 = ch.sections.get(f"aux8:{a_name}")
             sec = ch.sections.get(f"aux:{a_name}")
@@ -735,12 +787,32 @@ class CheckNRunManager:
                 o, n = sec
                 a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
             width = a_vals.size // max(ch.n_rows, 1)
-            with aux_lock:
-                if a_name not in aux_out:
-                    rows = out.shape[0]  # == rec.rows unless shard-local
-                    shape = (rows,) if width == 1 else (rows, width)
-                    aux_out[a_name] = np.zeros(shape, dtype=np.dtype(a_dt))
+            aux[a_name] = (a_vals, width, np.dtype(a_dt))
+        return idx, vals, aux
+
+    def _apply_decoded(self, out: np.ndarray,
+                       aux_out: Dict[str, np.ndarray], rec: mf.TableRecord,
+                       ch: mf.ChunkRecord, row_offset: int, decoded) -> None:
+        """Scatter one decoded chunk (the single ordered applier thread —
+        chain-replay overwrite order is preserved by submission order, so
+        no locking is needed here). ``row_offset`` shifts the chunk's
+        global row indices into a shard-local ``out`` (restore_part)."""
+        idx, vals, aux = decoded
+        if row_offset:
+            idx = idx - row_offset
+        out[idx] = vals
+        for a_name, (a_vals, width, a_dt) in aux.items():
+            if a_name not in aux_out:
+                rows = out.shape[0]  # == rec.rows unless shard-local
+                shape = (rows,) if width == 1 else (rows, width)
+                aux_out[a_name] = np.zeros(shape, dtype=a_dt)
             if width == 1:
                 aux_out[a_name][idx] = a_vals
             else:
                 aux_out[a_name][idx] = a_vals.reshape(-1, width)
+
+    def _decode_dense(self, rec: mf.DenseRecord, data: bytes) -> np.ndarray:
+        if ObjectStore.checksum(data) != rec.crc32:
+            raise IOError(f"checksum mismatch for {rec.key}")
+        return np.frombuffer(
+            data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()

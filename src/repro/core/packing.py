@@ -106,6 +106,19 @@ def packed_nbytes(count: int, bits: int) -> int:
     return (count * bits + 7) // 8
 
 
+def words_to_payload(words: np.ndarray, count: int, bits: int) -> bytes:
+    """Serialize a device-packed uint32 word stream (the fused
+    quantize+pack kernel's output) to the ``pack_bits`` wire format.
+
+    The word stream is little-endian by construction (code ``p`` at stream
+    bit ``bits*p``), so on little-endian hosts this is a plain byte view
+    truncated to the exact payload length; ``astype("<u4")`` keeps
+    big-endian hosts correct at the cost of one copy there.
+    """
+    buf = np.ascontiguousarray(words, dtype="<u4").tobytes()
+    return buf[:packed_nbytes(count, bits)]
+
+
 # ---------------------------------------------------------------------------
 # Reference implementation (original bit-matrix expansion). Same wire format;
 # kept as the correctness oracle and microbench baseline.

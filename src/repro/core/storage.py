@@ -239,7 +239,7 @@ def host_link(key: str) -> int:
 
 
 class ThrottledStore(ObjectStore):
-    """Caps write bandwidth (bytes/sec) to emulate remote-storage limits.
+    """Caps link bandwidth (bytes/sec) to emulate remote-storage limits.
 
     By default concurrent ``put`` calls share ONE link: each reserves a
     transmission slot on a common timeline, so N parallel writers never
@@ -247,39 +247,59 @@ class ThrottledStore(ObjectStore):
     write engine honest — parallelism overlaps encoding with the link, it
     does not conjure extra bandwidth.
 
+    The read direction models network-bound RECOVERY the same way:
+    ``read_bytes_per_sec`` reserves slots on a separate per-link download
+    timeline (links are full-duplex — reads never queue behind writes),
+    and ``read_latency_s`` charges a fixed per-request first-byte latency
+    (object-store GETs pay a round trip before data flows). Latencies of
+    concurrent requests overlap; bandwidth is shared — so a serial
+    chunk-by-chunk restore pays ``n × latency + bytes/bw`` while a
+    pipelined one pays ``≈ max(latency, bytes/bw)`` past the first chunk,
+    which is exactly the effect ``benchmarks/write_path.py --restore-only``
+    measures. Both default off (reads cost nothing), matching the
+    write-only modelling older benchmarks assume.
+
     With ``num_links > 1`` the store models per-host uplinks instead: a
-    ``link_of(key)`` selector (e.g. :func:`host_link`) routes each put to
-    one of ``num_links`` independent timelines, each capped at
-    ``write_bytes_per_sec``. Shared-aggregate vs per-host links is exactly
+    ``link_of(key)`` selector (e.g. :func:`host_link`) routes each
+    transfer to one of ``num_links`` independent timelines, each capped at
+    the configured bandwidth. Shared-aggregate vs per-host links is exactly
     the comparison ``benchmarks/write_path.py --num-hosts`` sweeps.
     """
 
     def __init__(self, inner: ObjectStore, write_bytes_per_sec: float,
                  cancel_event: Optional[threading.Event] = None,
                  num_links: int = 1,
-                 link_of: Optional[Callable[[str], int]] = None) -> None:
+                 link_of: Optional[Callable[[str], int]] = None,
+                 read_bytes_per_sec: Optional[float] = None,
+                 read_latency_s: float = 0.0) -> None:
         super().__init__()
         self.inner = inner
         self.bw = float(write_bytes_per_sec)
+        self.read_bw = (float(read_bytes_per_sec)
+                        if read_bytes_per_sec else None)
+        self.read_latency = float(read_latency_s)
         self.cancel_event = cancel_event or threading.Event()
         self.counters = inner.counters
         self.num_links = max(1, num_links)
         self.link_of = link_of
         self._link_lock = threading.Lock()
-        self._link_free_at = [0.0] * self.num_links
+        self._link_free_at = [0.0] * self.num_links       # uplink timeline
+        self._read_free_at = [0.0] * self.num_links       # downlink timeline
 
     def _link_index(self, key: str) -> int:
         if self.link_of is None or self.num_links == 1:
             return 0
         return self.link_of(key) % self.num_links
 
-    def put(self, key: str, data: bytes) -> None:
-        delay = len(data) / self.bw
-        link = self._link_index(key)
+    def _transmit(self, key: str, nbytes: int, bw: float,
+                  timeline: list, link: int) -> None:
+        """Reserve a ``nbytes/bw`` slot on a link timeline and sleep it out
+        (cancellable); refunds the unused reservation on cancellation."""
+        delay = nbytes / bw
         with self._link_lock:
-            start = max(time.monotonic(), self._link_free_at[link])
+            start = max(time.monotonic(), timeline[link])
             end = start + delay
-            self._link_free_at[link] = end
+            timeline[link] = end
         try:
             # Sleep in slices so a cancel (straggler mitigation, §3.3)
             # interrupts mid-transmission.
@@ -292,16 +312,29 @@ class ThrottledStore(ObjectStore):
         except CheckpointCancelled:
             # Return our unused reservation so the next checkpoint does not
             # inherit a phantom backlog from cancelled transmissions. Each
-            # put refunds only its own [start, end) slot, so concurrent
+            # transfer refunds only its own [start, end) slot, so concurrent
             # cancellations refund correctly in any order.
             with self._link_lock:
                 unused = max(0.0, end - max(time.monotonic(), start))
-                self._link_free_at[link] -= unused
+                timeline[link] -= unused
             raise
+
+    def put(self, key: str, data: bytes) -> None:
+        self._transmit(key, len(data), self.bw, self._link_free_at,
+                       self._link_index(key))
         self.inner.put(key, data)
 
     def get(self, key: str) -> bytes:
-        return self.inner.get(key)
+        data = self.inner.get(key)
+        if self.read_latency > 0:
+            # per-request first-byte latency: overlaps across concurrent
+            # requests (it is server/RTT time, not link occupancy)
+            if self.cancel_event.wait(timeout=self.read_latency):
+                raise CheckpointCancelled(key)
+        if self.read_bw is not None:
+            self._transmit(key, len(data), self.read_bw,
+                           self._read_free_at, self._link_index(key))
+        return data
 
     def delete(self, key: str) -> None:
         self.inner.delete(key)

@@ -63,10 +63,12 @@ class HostShardWriter:
         (``_submit_table_chunks`` / ``_make_table_record``) — the host key
         prefix and the row-range selection are the only differences from the
         single-host path, which is what keeps restores byte-identical."""
+        from ..core.checkpoint import _QuantClock
+
         step = snap.step
         full = decision == "full"
         prefix = mf.chunk_host_prefix(step, self.host)
-        quant_s = 0.0
+        clock = _QuantClock()
         pipe = self.enc._make_pipeline(self.cancel, self.deadline)
         table_futs: Dict[str, list] = {}
         table_shape: Dict[str, tuple] = {}
@@ -78,10 +80,8 @@ class HostShardWriter:
                 sel = self.enc._select_rows(decision, name, rows, cum, unc,
                                             row_range=(lo, hi))
                 aux = snap.row_state.get(name, {})
-                futs, q_s = self.enc._submit_table_chunks(
-                    pipe, name, tab, sel, aux, qcfg, full, prefix)
-                quant_s += q_s
-                table_futs[name] = futs
+                table_futs[name] = self.enc._submit_table_chunks(
+                    pipe, name, tab, sel, aux, qcfg, full, prefix, clock)
                 table_shape[name] = (rows, dim, str(tab.dtype), aux)
 
             for key_name, arr in snap.dense.items():
@@ -119,9 +119,9 @@ class HostShardWriter:
         st = pipe.stats
         self.stats = dict(
             host=self.host, items=st.items, payload_bytes=st.payload_bytes,
-            quantize_s=quant_s, encode_busy_s=st.encode_busy_s,
+            quantize_s=clock.seconds, encode_busy_s=st.encode_busy_s,
             write_busy_s=st.write_busy_s, wall_s=st.wall_s,
-            occupancy=st.occupancy(pipe.encode_workers, pipe.write_workers))
+            occupancy=pipe.occupancy())
         return part
 
 

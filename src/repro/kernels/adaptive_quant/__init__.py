@@ -1,4 +1,5 @@
-from .ops import adaptive_quant
+from .ops import PackedQuant, adaptive_quant, quant_codes, quant_pack
 from .ref import adaptive_quant_ref
 
-__all__ = ["adaptive_quant", "adaptive_quant_ref"]
+__all__ = ["PackedQuant", "adaptive_quant", "adaptive_quant_ref",
+           "quant_codes", "quant_pack"]

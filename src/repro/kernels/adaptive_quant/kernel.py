@@ -1,15 +1,37 @@
-"""Pallas TPU kernel: row-wise adaptive asymmetric checkpoint quantization
-(Check-N-Run §4.2.3) — the paper's checkpoint-optimization hot loop (must
-finish a terabyte-model quantization inside a 5-minute budget).
+"""Pallas TPU kernels: row-wise checkpoint quantization (Check-N-Run §4.2.3)
+— the paper's checkpoint-optimization hot loop (must finish a terabyte-model
+quantization inside a 5-minute budget).
 
-TPU mapping: rows tile into (BLOCK_ROWS, dim) VMEM blocks (dim padded to the
-128-lane boundary by the wrapper); the greedy min/max search runs as an
-unrolled/fori loop of VPU ops entirely in VMEM, one pass per candidate
-shrink, so HBM traffic is exactly one read of the table + one write of the
-codes/scales — the kernel is memory-bound at roofline by construction.
+Two kernels share the greedy range search:
 
-Grid: (rows // BLOCK_ROWS,). Outputs: codes (uint8, unpacked — host packs
-bits at serialization), per-row scale and zero_point (f32).
+* ``adaptive_quant_kernel`` — the original: emits unpacked uint8 codes, the
+  host packs bits at serialization (kept for compat + as the unpacked
+  oracle).
+* ``quant_pack_kernel`` — the fused write path: one kernel emits the packed
+  little-endian bit stream as uint32 words plus per-row scale/zero, so the
+  host encode stage shrinks to header assembly and the HBM→host transfer
+  carries ``bits/8`` bytes per code instead of a full uint8. ``n_steps=0``
+  degrades the search to plain uniform asymmetric quantization (§4.2.1), so
+  one kernel serves both checkpoint methods.
+
+TPU mapping: rows tile into (BLOCK_ROWS, dim) VMEM blocks (dim padded to
+the 128-lane boundary by the wrapper); the greedy min/max search runs as a
+fori loop of VPU ops entirely in VMEM, one pass per candidate shrink, so
+HBM traffic is exactly one read of the table + one write of the packed
+words/scales — memory-bound at roofline by construction. The fused kernel's
+error evaluation works in normalized ``r = (x - lo) * inv_scale`` space
+(err = scale² · Σ (r - round(clip(r)))²): one multiply replaces the
+per-element divide and the dequantize round-trip of the textbook
+formulation — same greedy decisions up to f32 rounding ties.
+
+Packing layout: the flat row-major code stream is processed in groups of 32
+codes; group ``g`` lands in words ``[g·bits, (g+1)·bits)`` with code ``j``
+at bit offset ``bits·j`` inside the group — i.e. code ``p`` sits at stream
+bit ``bits·p``, exactly the wire format of ``core.packing.pack_bits``, so
+``words.tobytes()`` (little-endian) is byte-identical to the host packer
+and decodes through the unchanged ``unpack_bits`` oracle.
+
+Grids: (rows // BLOCK_ROWS,).
 """
 
 from __future__ import annotations
@@ -118,3 +140,136 @@ def adaptive_quant_pallas(x: jax.Array, *, bits: int, num_bins: int,
         interpret=interpret,
     )(x)
     return codes[:, :dim], scale, zero
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize + bit-pack kernel
+# ---------------------------------------------------------------------------
+
+
+def _search_range(x, x_min0, x_max0, *, levels, num_bins, n_steps, valid):
+    """Greedy range search in normalized r-space; returns (best_min,
+    best_max), each (rows, 1). ``n_steps=0`` → the full [min, max] range
+    (uniform asymmetric)."""
+    if n_steps == 0:
+        return x_min0, x_max0
+    step = (x_max0 - x_min0) / num_bins
+
+    def err_of(lo, hi):
+        rng = hi - lo
+        scale = jnp.where(rng > 0, rng / levels, 1.0)
+        r = (x - lo) * (1.0 / scale)
+        d = r - jnp.round(jnp.clip(r, 0.0, levels))
+        if valid is not None:
+            d = jnp.where(valid, d, 0.0)
+        return jnp.square(scale) * jnp.sum(jnp.square(d), axis=-1,
+                                           keepdims=True)
+
+    err0 = err_of(x_min0, x_max0)
+
+    def body(_, carry):
+        cur_min, cur_max, best_min, best_max, best_err = carry
+        err_lo = err_of(cur_min + step, cur_max)
+        err_hi = err_of(cur_min, cur_max - step)
+        take_lo = err_lo <= err_hi
+        new_min = jnp.where(take_lo, cur_min + step, cur_min)
+        new_max = jnp.where(take_lo, cur_max, cur_max - step)
+        cur_err = jnp.where(take_lo, err_lo, err_hi)
+        improve = cur_err < best_err
+        best_min = jnp.where(improve, new_min, best_min)
+        best_max = jnp.where(improve, new_max, best_max)
+        best_err = jnp.where(improve, cur_err, best_err)
+        return new_min, new_max, best_min, best_max, best_err
+
+    init = (x_min0, x_max0, x_min0, x_max0, err0)
+    _, _, best_min, best_max, _ = jax.lax.fori_loop(0, n_steps, body, init)
+    return best_min, best_max
+
+
+def pack_codes_u32(codes: jax.Array, bits: int) -> jax.Array:
+    """Bit-pack a flat uint32 code array (size % 32 == 0) into the
+    little-endian word stream: code ``p`` occupies stream bits
+    ``[bits*p, bits*(p+1))``. Shared by the Pallas kernel body and the jnp
+    device fallback in ``ops.py`` so both paths emit identical words."""
+    g = codes.reshape(-1, 32)
+    ngroups = g.shape[0]
+    cols = [jnp.zeros((ngroups,), jnp.uint32) for _ in range(bits)]
+    for j in range(32):
+        bitpos = bits * j
+        wi, sh = bitpos >> 5, bitpos & 31
+        cols[wi] = cols[wi] | (g[:, j] << sh)
+        if sh + bits > 32:
+            cols[wi + 1] = cols[wi + 1] | (g[:, j] >> (32 - sh))
+    return jnp.stack(cols, axis=1).reshape(-1)
+
+
+def quant_pack_kernel(x_ref, packed_ref, scale_ref, zero_ref, *,
+                      bits: int, num_bins: int, n_steps: int, valid_dim: int):
+    x = x_ref[...].astype(jnp.float32)  # (BLOCK_ROWS, DIM_PAD) in VMEM
+    levels = float((1 << bits) - 1)
+
+    dim_pad = x.shape[-1]
+    if valid_dim != dim_pad:
+        lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        valid = lane < valid_dim
+        big = jnp.float32(3.4e38)
+        x_min0 = jnp.min(jnp.where(valid, x, big), axis=-1, keepdims=True)
+        x_max0 = jnp.max(jnp.where(valid, x, -big), axis=-1, keepdims=True)
+    else:
+        valid = None
+        x_min0 = jnp.min(x, axis=-1, keepdims=True)
+        x_max0 = jnp.max(x, axis=-1, keepdims=True)
+
+    best_min, best_max = _search_range(
+        x, x_min0, x_max0, levels=levels, num_bins=num_bins,
+        n_steps=n_steps, valid=valid)
+
+    rng = best_max - best_min
+    scale = jnp.where(rng > 0, rng / levels, 1.0)
+    q = jnp.round((jnp.clip(x, best_min, best_max) - best_min) / scale)
+    codes = jnp.clip(q, 0.0, levels).astype(jnp.uint32)
+    packed_ref[...] = pack_codes_u32(codes[:, :valid_dim], bits)
+    scale_ref[...] = scale[:, 0]
+    zero_ref[...] = best_min[:, 0]
+
+
+def quant_pack_pallas(x: jax.Array, *, bits: int, num_bins: int,
+                      n_steps: int, block_rows: int = 256,
+                      interpret: bool = False):
+    """x (rows, dim) f32 → (packed u32 (rows*dim*bits//32,), scale (rows,),
+    zero (rows,)).
+
+    rows must divide block_rows; block_rows must be a multiple of 32 so
+    every grid block emits whole words (the wrapper in ``ops.py``
+    guarantees both). dim is padded to 128 lanes internally; padding lanes
+    are masked out of the search and sliced off before packing.
+    """
+    rows, dim = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert block_rows % 32 == 0, block_rows
+    dim_pad = ((dim + 127) // 128) * 128
+    if dim_pad != dim:
+        x = jnp.pad(x, ((0, 0), (0, dim_pad - dim)))
+
+    words_per_block = block_rows * dim * bits // 32
+    grid = (rows // block_rows,)
+    kernel = functools.partial(quant_pack_kernel, bits=bits,
+                               num_bins=num_bins, n_steps=n_steps,
+                               valid_dim=dim)
+    packed, scale, zero = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, dim_pad), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((words_per_block,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows * dim * bits // 32,), jnp.uint32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return packed, scale, zero

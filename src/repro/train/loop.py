@@ -9,6 +9,7 @@ failure injection for the recovery tests/examples.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -32,6 +33,17 @@ class TrainerConfig:
     use_reader_tier: bool = True
 
 
+@functools.lru_cache(maxsize=32)
+def _jitted_step(step_fn):
+    """Process-wide jit cache keyed on the bundle's step callable: every
+    Trainer over the same cell reuses ONE compiled train step instead of
+    re-tracing per instance (the recovery tests spin up 3-4 Trainers per
+    cell — this is most of their former multi-minute wall time). Bounded so
+    a long-lived sweep constructing many distinct bundles doesn't retain
+    every compiled executable forever."""
+    return jax.jit(step_fn, donate_argnums=(0,))
+
+
 class Trainer:
     def __init__(self, bundle, store: ObjectStore, ckpt_cfg: CheckpointConfig,
                  trainer_cfg: Optional[TrainerConfig] = None,
@@ -46,7 +58,7 @@ class Trainer:
         self.batch_fn = batch_fn or (lambda i: batch_for_cell(bundle, i))
         self.lease = ReaderLease(ckpt_cfg.interval_batches)
         self.reader: Optional[DataReader] = None
-        self.step_fn = jax.jit(bundle.step_fn, donate_argnums=(0,))
+        self.step_fn = _jitted_step(bundle.step_fn)
         self.state: Optional[TrainState] = None
         self.history: List[Dict[str, float]] = []
         self.stall_times: List[float] = []

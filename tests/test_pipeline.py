@@ -1,6 +1,8 @@
-"""Write-pipeline semantics: bounded window, ordering, cancellation leaves
-no committed manifest, overlap="cancel" preemption, and worker crashes
-surfacing as Future exceptions (never a hang)."""
+"""Pipeline semantics, both directions: bounded window, ordering,
+cancellation leaves no committed manifest, overlap="cancel" preemption,
+worker crashes surfacing as Future exceptions (never a hang), the generic
+stage executor's ordered-final-stage contract, and the streaming restore
+engine's equivalence + read-throttle modelling."""
 
 import threading
 import time
@@ -13,7 +15,9 @@ from repro.core import (
     CheckpointConfig,
     CheckpointCancelled,
     InMemoryStore,
+    RestorePipeline,
     Snapshot,
+    StagePipeline,
     ThrottledStore,
     WritePipeline,
 )
@@ -132,6 +136,190 @@ def test_deadline_aborts():
         pipe.submit(lambda: (b"x", 0), lambda p: None)
         pipe.drain()
     pipe.close()
+
+
+# ------------------------------------------------- generic stage executor
+
+
+def test_stage_pipeline_three_stages_chain_values():
+    pipe = StagePipeline([("a", 2), ("b", 2), ("c", 2)])
+    for i in range(12):
+        pipe.submit([lambda i=i: i, lambda v: v * 10, lambda v: v + 1])
+    results = pipe.drain()
+    pipe.close()
+    assert results == [i * 10 + 1 for i in range(12)]
+    assert pipe.stats.items == 12
+    assert set(pipe.stats.busy) == {"a", "b", "c"}
+
+
+def test_ordered_final_stage_applies_in_submission_order():
+    """Middle-stage completion order is scrambled; the ordered final stage
+    must still run strictly in submission order."""
+    applied = []
+    pipe = StagePipeline([("fetch", 4), ("decode", 4), ("apply", 2)],
+                         ordered_final=True)
+    assert pipe.workers["apply"] == 1  # ordering forces a single applier
+    for i in range(30):
+        # reverse-staggered decode delays force out-of-order readiness
+        delay = 0.012 if i % 3 == 0 else 0.0
+        pipe.submit([lambda i=i: i,
+                     lambda v, d=delay: (time.sleep(d), v)[1],
+                     lambda v: applied.append(v)])
+    pipe.drain()
+    pipe.close()
+    assert applied == list(range(30))
+
+
+def test_ordered_final_stage_failed_item_never_strands_successors():
+    """An item that dies in decode must tombstone its slot so later items
+    still reach the ordered applier (no hang, no skipped successors)."""
+    applied = []
+    pipe = StagePipeline([("fetch", 2), ("decode", 2), ("apply", 1)],
+                         ordered_final=True, max_inflight=3)
+
+    def decode(v):
+        if v == 1:
+            raise RuntimeError("decode crashed")
+        return v
+
+    futs = []
+    with pytest.raises(RuntimeError, match="decode crashed"):
+        for i in range(10):
+            futs.append(pipe.submit([lambda i=i: i, decode,
+                                     lambda v: applied.append(v)]))
+        pipe.drain()
+    pipe.close()
+    assert all(f.done() for f in futs)
+    assert isinstance(futs[1].exception(timeout=5), RuntimeError)
+    # item 0 must have applied; the abort cascade may stop any later ones,
+    # but whatever applied is in order and gap-free except the failure
+    assert applied == sorted(applied)
+    assert 1 not in applied
+
+
+def test_restore_pipeline_bounded_window():
+    peak = [0]
+    live = [0]
+    lock = threading.Lock()
+
+    def fetch(i):
+        with lock:
+            live[0] += 1
+            peak[0] = max(peak[0], live[0])
+        return b"x" * 8
+
+    def apply_(v):
+        time.sleep(0.004)
+        with lock:
+            live[0] -= 1
+
+    pipe = RestorePipeline(fetch_workers=3, decode_workers=2, max_inflight=4)
+    for i in range(24):
+        pipe.submit(lambda i=i: fetch(i), lambda d: d, apply_)
+    pipe.drain()
+    pipe.close()
+    assert peak[0] <= 4
+    assert pipe.stats.payload_bytes == 24 * 8
+
+
+# ------------------------------------------------- streaming restore engine
+
+
+def _chain_store(rng, rows=4000, dim=16, chunk_rows=700, incs=2):
+    """Build baseline + ``incs`` incremental checkpoints; returns
+    (store, config, final_step, final_tables_dict)."""
+    table = rng.normal(size=(rows, dim)).astype(np.float32)
+    acc = np.abs(rng.normal(size=rows)).astype(np.float32)
+    store = InMemoryStore()
+    # consecutive: every increment stays in the recovery chain → real
+    # chain replay (baseline + incs manifests)
+    cfg = CheckpointConfig(policy="consecutive", quant=None,
+                           async_write=False, chunk_rows=chunk_rows)
+    mgr = CheckNRunManager(store, cfg)
+    snap = Snapshot(step=1, tables={"emb": table.copy()},
+                    row_state={"emb": {"acc": acc.copy()}},
+                    touched={"emb": np.ones(rows, bool)}, dense={}, extra={})
+    mgr.save(snap).result()
+    for s in range(2, 2 + incs):
+        idx = rng.choice(rows, rows // 5, replace=False)
+        table[idx] += rng.normal(size=(len(idx), dim)).astype(np.float32)
+        acc[idx] = np.abs(rng.normal(size=len(idx))).astype(np.float32)
+        t = np.zeros(rows, bool)
+        t[idx] = True
+        mgr.save(Snapshot(step=s, tables={"emb": table.copy()},
+                          row_state={"emb": {"acc": acc.copy()}},
+                          touched={"emb": t}, dense={}, extra={})).result()
+    mgr.close()
+    return store, cfg, 1 + incs, {"emb": (table, acc)}
+
+
+def test_streaming_restore_replays_chain_in_order():
+    """Chain replay through the streaming engine: later increments must
+    overwrite the baseline even though all chunks fetch/decode
+    concurrently — the final state equals the last snapshot exactly."""
+    rng = np.random.default_rng(11)
+    store, cfg, last, final = _chain_store(rng)
+    mgr = CheckNRunManager(store, cfg)
+    rs = mgr.restore()
+    mgr.close()
+    assert rs.step == last and rs.chain_len == last
+    table, acc = final["emb"]
+    np.testing.assert_array_equal(rs.tables["emb"], table)
+    np.testing.assert_array_equal(rs.row_state["emb"]["acc"], acc)
+    assert rs.stats is not None and rs.stats["items"] > 0
+    assert set(rs.stats["occupancy"]) == {"fetch", "decode", "apply"}
+
+
+def test_streaming_restore_corrupt_chunk_raises():
+    rng = np.random.default_rng(12)
+    store, cfg, last, _ = _chain_store(rng, incs=1)
+    key = next(k for k in store.list("chunks/") if k.endswith("000000.bin"))
+    blob = bytearray(store.get(key))
+    blob[7] ^= 0xFF
+    store.put(key, bytes(blob))
+    mgr = CheckNRunManager(store, cfg)
+    with pytest.raises(IOError, match="checksum mismatch"):
+        mgr.restore()
+    mgr.close()
+
+
+def test_read_throttled_store_models_bandwidth_and_latency():
+    inner = InMemoryStore()
+    inner.put("a", b"x" * 100_000)
+    inner.put("b", b"x" * 100_000)
+    # unthrottled reads stay free
+    free = ThrottledStore(inner, write_bytes_per_sec=1e12)
+    t0 = time.monotonic()
+    free.get("a")
+    assert time.monotonic() - t0 < 0.05
+    # 1 MB/s + 30ms latency → each 100kB get costs ≥ 0.13s; two serial
+    # gets share the link (≥ 0.23s total), latency overlaps concurrently
+    slow = ThrottledStore(inner, write_bytes_per_sec=1e12,
+                          read_bytes_per_sec=1e6, read_latency_s=0.03)
+    t0 = time.monotonic()
+    slow.get("a")
+    one = time.monotonic() - t0
+    assert one >= 0.12
+    t0 = time.monotonic()
+    slow.get("a")
+    slow.get("b")
+    assert time.monotonic() - t0 >= 0.23
+
+
+def test_read_throttle_cancellable():
+    inner = InMemoryStore()
+    inner.put("a", b"x" * 1_000_000)
+    cancel = threading.Event()
+    slow = ThrottledStore(inner, write_bytes_per_sec=1e12,
+                          cancel_event=cancel,
+                          read_bytes_per_sec=100_000)  # 10s transfer
+    t = threading.Timer(0.1, cancel.set)
+    t.start()
+    t0 = time.monotonic()
+    with pytest.raises(CheckpointCancelled):
+        slow.get("a")
+    assert time.monotonic() - t0 < 2.0
+    t.cancel()
 
 
 # ------------------------------------------------- manager-level semantics

@@ -17,9 +17,20 @@ from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore, PAPER_
 from repro.data.cells import batch_for_cell
 from repro.train.loop import SimulatedFailure, Trainer, TrainerConfig
 
-# multi-minute training-stack tests: excluded from the fast CI set
-# (`-m "not slow"`), exercised by the scheduled full job
-pytestmark = pytest.mark.slow
+# Back in the fast push-time set: Trainers share one compiled train step
+# per cell (train.loop._jitted_step) and the runs are trimmed to the
+# shortest schedules that still cross a checkpoint + failure + recovery.
+
+
+_CELLS = {}
+
+
+def get_cell_cached(arch):
+    """One bundle per arch for the whole module: every test's Trainers then
+    share one compiled train step via train.loop._jitted_step."""
+    if arch not in _CELLS:
+        _CELLS[arch] = get_cell(arch, "train_batch", reduced=True)
+    return _CELLS[arch]
 
 
 def flat_params(state):
@@ -30,35 +41,35 @@ def flat_params(state):
 
 @pytest.mark.parametrize("arch", ["dlrm-rm2", "bert4rec"])
 def test_failure_recovery_bitwise_equal(arch):
-    """Kill at step 7, restore from the step-5 checkpoint, retrain → params
-    identical to an uninterrupted 10-step run."""
-    bundle = get_cell(arch, "train_batch", reduced=True)
+    """Kill at step 5, restore from the step-3 checkpoint, retrain → params
+    identical to an uninterrupted 6-step run."""
+    bundle = get_cell_cached(arch)
 
     # uninterrupted reference run
     ref_store = InMemoryStore()
     t_ref = Trainer(bundle, ref_store,
-                    CheckpointConfig(interval_batches=5, policy="intermittent",
+                    CheckpointConfig(interval_batches=3, policy="intermittent",
                                      quant=None, async_write=False),
-                    TrainerConfig(total_steps=10, use_reader_tier=True))
+                    TrainerConfig(total_steps=6, use_reader_tier=True))
     t_ref.init_or_restore()
-    ref_state = t_ref.run(10)
+    ref_state = t_ref.run(6)
     t_ref.close()
 
     # failing run on its own store
     store = InMemoryStore()
-    cfg = CheckpointConfig(interval_batches=5, policy="intermittent",
+    cfg = CheckpointConfig(interval_batches=3, policy="intermittent",
                            quant=None, async_write=False)
-    t1 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=10))
+    t1 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=6))
     t1.init_or_restore()
     with pytest.raises(SimulatedFailure):
-        t1.run(10, fail_at_step=7)
+        t1.run(6, fail_at_step=5)
     t1.close()
 
-    # recovery: restore from checkpoint@5, train to 10
-    t2 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=10))
+    # recovery: restore from checkpoint@3, train to 6
+    t2 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=6))
     start = t2.init_or_restore()
-    assert start == 5
-    final = t2.run(5)
+    assert start == 3
+    final = t2.run(3)
     t2.close()
 
     a, b = flat_params(ref_state), flat_params(final)
@@ -72,19 +83,19 @@ def test_quantized_recovery_bounded_and_trains():
     checkpoint state only by the quantization error (compare against an
     fp32-checkpoint twin run at the SAME restore step — no training drift),
     and training must continue to finite losses."""
-    bundle = get_cell("dlrm-rm2", "train_batch", reduced=True)
+    bundle = get_cell_cached("dlrm-rm2")
 
     def run_and_restore(quant):
         store = InMemoryStore()
-        cfg = CheckpointConfig(interval_batches=4, policy="intermittent",
+        cfg = CheckpointConfig(interval_batches=3, policy="intermittent",
                                quant=quant, async_write=False)
-        t1 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=8))
+        t1 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=6))
         t1.init_or_restore()
         with pytest.raises(SimulatedFailure):
-            t1.run(8, fail_at_step=6)
+            t1.run(6, fail_at_step=5)
         t1.close()
-        t2 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=8))
-        assert t2.init_or_restore() == 4
+        t2 = Trainer(bundle, store, cfg, TrainerConfig(total_steps=6))
+        assert t2.init_or_restore() == 3
         return t2
 
     tq = run_and_restore(PAPER_DEFAULTS[4])
@@ -93,7 +104,7 @@ def test_quantized_recovery_bounded_and_trains():
     rel_mean = max(np.abs(a[k] - b[k]).mean() / (np.abs(a[k]).mean() + 1e-9)
                    for k in a)
     assert 0 < rel_mean < 0.1   # pure quantization delta, small but nonzero
-    final = tq.run(4)
+    final = tq.run(3)
     tq.close()
     tf.close()
     assert np.isfinite(float(jax.device_get(final.step)))
@@ -101,16 +112,16 @@ def test_quantized_recovery_bounded_and_trains():
 
 def test_trainer_stall_fraction_small():
     """§3.2: snapshot stall is a tiny fraction of train time (decoupling)."""
-    bundle = get_cell("dlrm-rm2", "train_batch", reduced=True)
+    bundle = get_cell_cached("dlrm-rm2")
     store = InMemoryStore()
     t = Trainer(bundle, store,
-                CheckpointConfig(interval_batches=5, policy="intermittent",
+                CheckpointConfig(interval_batches=3, policy="intermittent",
                                  quant=PAPER_DEFAULTS[4], async_write=True),
-                TrainerConfig(total_steps=10))
+                TrainerConfig(total_steps=6))
     t.init_or_restore()
     import time
     t0 = time.monotonic()
-    t.run(10)
+    t.run(6)
     total = time.monotonic() - t0
     t.manager.wait()
     t.close()
@@ -118,7 +129,7 @@ def test_trainer_stall_fraction_small():
 
 
 def test_touched_masks_reset_after_checkpoint():
-    bundle = get_cell("dlrm-rm2", "train_batch", reduced=True)
+    bundle = get_cell_cached("dlrm-rm2")
     store = InMemoryStore()
     t = Trainer(bundle, store,
                 CheckpointConfig(interval_batches=3, policy="one_shot",
