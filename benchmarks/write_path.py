@@ -339,6 +339,81 @@ def bench_sharded(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_multiprocess(args, qcfg: QuantConfig) -> dict:
+    """Real-process host sweep: the same snapshot written by N OS processes
+    (``repro.dist.host_proc``, coordinator-less last-voter commit) over a
+    shared LocalFSStore, vs the thread-simulated engine over the same
+    store. Process wall includes spawn + interpreter/jax import — the cost
+    of REAL host isolation — so it is reported alongside, not speedup-
+    compared. Every configuration's restore must be byte-identical to the
+    unthrottled single-host reference restore."""
+    import shutil
+    import tempfile
+
+    from repro.core import CheckNRunManager as Mgr
+    from repro.core import LocalFSStore
+
+    snap = make_workload(args.tables, args.rows, args.dim, seed=3,
+                         dense_dim=32)
+    ref_store = InMemoryStore()
+    ref_mgr = Mgr(ref_store, CheckpointConfig(
+        policy="full_only", quant=qcfg, async_write=False,
+        chunk_rows=args.chunk_rows))
+    payload = ref_mgr.save(snap).result().nbytes
+    ref = ref_mgr.restore()
+    ref_mgr.close()
+
+    def check(rs, label):
+        for name in snap.tables:
+            if not np.array_equal(ref.tables[name], rs.tables[name]):
+                raise AssertionError(f"multiprocess mismatch: {name} ({label})")
+            if not np.array_equal(ref.row_state[name]["acc"],
+                                  rs.row_state[name]["acc"]):
+                raise AssertionError(f"multiprocess aux mismatch: {name} "
+                                     f"({label})")
+        for name in snap.dense:
+            if not np.array_equal(ref.dense[name], rs.dense[name]):
+                raise AssertionError(f"multiprocess dense mismatch: {name} "
+                                     f"({label})")
+
+    sweep = []
+    for n in args.mp_hosts:
+        tmp = tempfile.mkdtemp(prefix="cnr-bench-mp-")
+        try:
+            row = {"num_hosts": n}
+            for mode in ("threads", "processes"):
+                store = LocalFSStore(os.path.join(tmp, mode))
+                mgr = Mgr(store, CheckpointConfig(
+                    policy="full_only", quant=qcfg, async_write=False,
+                    chunk_rows=args.chunk_rows, num_hosts=n,
+                    multiprocess=(mode == "processes"), spill_dir=tmp,
+                    encode_workers=args.encode_workers,
+                    write_workers=args.write_workers))
+                t0 = time.monotonic()
+                res = mgr.save(snap).result()
+                wall = time.monotonic() - t0
+                check(mgr.restore(), f"{n} hosts, {mode}")
+                entry = {"wall_s": round(wall, 4),
+                         "mbps": round(payload / wall / 1e6, 2)}
+                if mode == "processes":
+                    entry["exit_codes"] = res.pipeline_stats["exit_codes"]
+                row[mode] = entry
+                mgr.close()
+            sweep.append(row)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return {
+        "config": {"tables": args.tables, "rows": args.rows, "dim": args.dim,
+                   "bits": qcfg.bits, "method": qcfg.method,
+                   "payload_bytes": payload},
+        "note": "process wall includes per-host interpreter+jax spawn "
+                "(the price of real host isolation; amortized over a "
+                "training job's lifetime in production)",
+        "sweep": sweep,
+        "restored_identical": True,
+    }
+
+
 def _touch_snap(base: Snapshot, step: int, frac: float, seed: int) -> Snapshot:
     """Derive an incremental snapshot: mutate a random ``frac`` of each
     table's rows and mark them touched."""
@@ -585,6 +660,14 @@ def main(argv=None):
     ap.add_argument("--restore-only", action="store_true",
                     help="run only the restore section (CI gate: exits "
                          "nonzero unless restores are byte-identical)")
+    ap.add_argument("--multiprocess", action="store_true",
+                    help="include the real-process host sweep (OS process "
+                         "per host, coordinator-less last-voter commit)")
+    ap.add_argument("--mp-hosts", default="2,4",
+                    help="host counts for the --multiprocess sweep")
+    ap.add_argument("--multiprocess-only", action="store_true",
+                    help="run only the real-process sweep (CI gate: exits "
+                         "nonzero unless restores are byte-identical)")
     ap.add_argument("--prior-adaptive-wall", type=float, default=1.157,
                     help="previously recorded pipelined adaptive wall_s "
                          "(the issue's 3x baseline)")
@@ -598,8 +681,29 @@ def main(argv=None):
         args.read_mbps, args.read_latency_ms = 20.0, 5.0
         args.restore_repeats = 1
     args.num_hosts = [int(n) for n in str(args.num_hosts).split(",") if n]
+    args.mp_hosts = [int(n) for n in str(args.mp_hosts).split(",") if n]
+    if args.tiny and args.multiprocess_only:
+        args.mp_hosts = [2]
 
     qcfg = QuantConfig(bits=args.bits, method=args.method).resolve()
+
+    if args.multiprocess_only:
+        print(f"== multiprocess hosts ({args.tables}x{args.rows}x{args.dim},"
+              f" hosts {args.mp_hosts}) ==")
+        multiproc = bench_multiprocess(args, qcfg)
+        print(json.dumps(multiproc, indent=1))
+        report = {
+            "bench": "write_path:multiprocess_only",
+            "multiprocess": multiproc,
+            "acceptance": {
+                "multiprocess_restored_identical":
+                    multiproc["restored_identical"],
+            },
+        }
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
+        return report
 
     if args.restore_only:
         print(f"== chain restore ({args.tables}x{args.rows}x{args.dim}, "
@@ -650,6 +754,13 @@ def main(argv=None):
         sharded = bench_sharded(args, qcfg)
         print(json.dumps(sharded, indent=1))
 
+    multiproc = None
+    if args.multiprocess:
+        print(f"== multiprocess hosts {args.mp_hosts} "
+              f"(threads vs real OS processes) ==")
+        multiproc = bench_multiprocess(args, qcfg)
+        print(json.dumps(multiproc, indent=1))
+
     print(f"== packing microbench ({args.pack_codes} codes) ==")
     pack = bench_packing(args.pack_codes, extra_bits=args.bits)
     print(json.dumps(pack, indent=1))
@@ -661,6 +772,7 @@ def main(argv=None):
         "end_to_end_adaptive": adaptive,
         "restore": restore,
         "sharded": sharded,
+        "multiprocess": multiproc,
         "packing": pack,
         "acceptance": {
             "e2e_speedup_ge_3x": e2e["speedup_e2e"] >= 3.0,
@@ -674,6 +786,8 @@ def main(argv=None):
             "restore_speedup_ge_2_5x": restore["speedup_restore"] >= 2.5,
             "sharded_restored_identical": (
                 sharded["restored_identical"] if sharded else None),
+            "multiprocess_restored_identical": (
+                multiproc["restored_identical"] if multiproc else None),
             # per-host links must scale: 4 hosts ≥ 2× over the shared link
             "sharded_4host_speedup_ge_2x": (
                 next((r["per_host_speedup"] >= 2.0 for r in sharded["sweep"]

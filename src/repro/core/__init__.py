@@ -2,7 +2,14 @@
 
 from .bitwidth import BitwidthController, expected_failures, select_bits
 from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
-from .coordinator import CommitCoordinator, ShardCommitError
+from .coordinator import (
+    CommitContext,
+    CommitCoordinator,
+    ShardCommitError,
+    build_manifest,
+    try_commit,
+)
+from .manifest import CommitRaceError, commit_once
 from .pipeline import PipelineStats, RestorePipeline, StagePipeline, WritePipeline
 from .incremental import (
     ConsecutiveIncrement,

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import threading
 import time
 import traceback
@@ -45,7 +46,7 @@ from . import manifest as mf
 from . import packing
 from . import tracker
 from .bitwidth import BitwidthController
-from .coordinator import CommitCoordinator
+from .coordinator import CommitContext
 from .incremental import IncrementalPolicy, make_policy
 from .pipeline import RestorePipeline, WritePipeline
 from .quantize import (
@@ -56,7 +57,7 @@ from .quantize import (
     quantize,
 )
 from .snapshot import Snapshot
-from .storage import CheckpointCancelled, ObjectStore
+from .storage import CheckpointCancelled, LocalFSStore, ObjectStore
 
 META_DTYPE = np.float16  # fp16 scale/zero metadata (halves per-row overhead)
 
@@ -90,8 +91,19 @@ class CheckpointConfig:
     # ---- sharded multi-host writers (docs/sharded_writers.md) ----
     num_hosts: int = 1                     # >1 → per-host shard writers with
                                            # two-phase manifest commit
-    verify_shard_chunks: bool = True       # coordinator re-checks every
+    verify_shard_chunks: bool = True       # committing host re-checks every
                                            # chunk's existence+size pre-commit
+    multiprocess: bool = False             # num_hosts>1: real OS processes
+                                           # (LocalFSStore only) instead of
+                                           # thread-simulated hosts
+    spill_dir: Optional[str] = None        # scratch dir for multiprocess
+                                           # snapshot spills (default: tmp)
+    commit_poll_s: float = 0.02            # phase-2 vote-poll interval
+    commit_timeout_s: float = 120.0        # give up on a quorum that never
+                                           # forms (a peer died pre-vote)
+    failfast_grace_s: float = 10.0         # after a host process dies, how
+                                           # long surviving hosts may still
+                                           # finish phase 2 before SIGTERM
 
 
 @dataclasses.dataclass
@@ -160,7 +172,11 @@ class CheckNRunManager:
         # Orphan-blob GC bookkeeping: steps whose save failed/cancelled in
         # THIS process (reclaimed cheaply after the next commit), plus one
         # full namespace sweep per process for debris a predecessor left.
+        # Debris the sweep's fence skipped (newer than the then-latest
+        # commit — e.g. a predecessor that crashed AHEAD of the restore
+        # point) parks in _gc_pending until our own steps pass it.
         self._aborted_steps: set = set()
+        self._gc_pending: set = set()
         self._gc_swept = False
 
     # ------------------------------------------------------------------ save
@@ -446,21 +462,32 @@ class CheckNRunManager:
         # Reclaim aborted/cancelled saves' debris: one full sweep per
         # process (debris a crashed predecessor left), then only the steps
         # this process actually aborted — keeps the post-commit cost
-        # independent of store size on the happy path.
+        # independent of store size on the happy path. Steps the sweep's
+        # fence had to skip (a predecessor crashed at a step AHEAD of our
+        # restore point) are reclaimed as soon as our committed steps
+        # catch up — past `step` they can no longer be an in-flight save.
         if not self._gc_swept:
-            mf.gc_aborted(self.store)
+            mf.gc_aborted(self.store, skipped_out=self._gc_pending)
+            if isinstance(self.store, LocalFSStore):
+                # terminated writers' half-written temp files are invisible
+                # to the manifest-level GC (list() filters them)
+                self.store.reclaim_tmp()
             self._gc_swept = True
-        elif self._aborted_steps:
-            mf.gc_steps(self.store, self._aborted_steps)
+        due = {s for s in self._gc_pending if s <= step}
+        if self._aborted_steps or due:
+            mf.gc_steps(self.store, self._aborted_steps | due)
+            self._gc_pending -= due
         self._aborted_steps.clear()
 
     # ------------------------------------------------- sharded write (§3.4)
     def _write_sharded(self, snap: Snapshot, cum, unc,
                        cancel: threading.Event) -> SaveResult:
-        """Per-host shard writers + two-phase manifest commit. Each simulated
-        host runs its own WritePipeline over its row-shard and votes with a
-        part manifest; the coordinator commits the global manifest only when
-        every vote is present (docs/sharded_writers.md)."""
+        """Per-host shard writers + coordinator-less two-phase commit. Each
+        host (a thread here; its own OS process with ``multiprocess=True``)
+        runs its own WritePipeline over its row-shard, votes with a part
+        manifest, then polls the parts namespace — the LAST host to observe
+        all votes merges and commits the global manifest itself
+        (docs/sharded_writers.md). There is no coordinator rank."""
         from ..dist.shard_writer import HostShardWriter, run_host_writers
 
         t_start = time.monotonic()
@@ -482,7 +509,7 @@ class CheckNRunManager:
                 f"step {step} already has a committed checkpoint; sharded "
                 f"saves never overwrite committed steps")
         # Purge stale phase-1 votes from an earlier aborted attempt at this
-        # step: a leftover part manifest could otherwise satisfy collect()
+        # step: a leftover part manifest could otherwise satisfy the quorum
         # for a host that dies during THIS attempt (same step/host/num_hosts
         # stamps, same chunk sizes) and launder attempt-mixed state into a
         # committed manifest. Votes are cheap to rewrite; stale chunk blobs
@@ -492,22 +519,50 @@ class CheckNRunManager:
             self.store.delete(key)
 
         prev = mf.latest_step(self.store)  # before commit, like single-host
-        writers = [HostShardWriter(h, cfg.num_hosts, self.store, self,
-                                   cancel=cancel, deadline=deadline)
-                   for h in range(cfg.num_hosts)]
-        run_host_writers(writers, snap, decision, qcfg, cum, unc)
-
-        coord = CommitCoordinator(self.store, cfg.num_hosts,
-                                  verify_chunks=cfg.verify_shard_chunks)
         base = (step if decision == "full" else self.policy.state.baseline_step)
-        man = coord.commit(
-            step,
+        # The commit context is computed ONCE per attempt and shared by
+        # every host, so all potential phase-2 committers build
+        # byte-identical manifests (the idempotence invariant).
+        ctx = CommitContext(
             kind=decision, base_step=base, prev_step=prev,
             quant=(dataclasses.asdict(qcfg) if qcfg else None),
             policy=self.policy.to_dict() | {"name": self.policy.name},
             extra=snap.extra | {"bitwidth": (self.bitwidth.to_dict()
-                                             if self.bitwidth else None)},
-            wall_time_s=time.monotonic() - t_start)
+                                             if self.bitwidth else None)})
+
+        if cfg.multiprocess:
+            return self._write_sharded_multiprocess(
+                snap, cum, unc, cancel, decision, qcfg, ctx, t_start,
+                deadline)
+
+        writers = [HostShardWriter(h, cfg.num_hosts, self.store, self,
+                                   cancel=cancel, deadline=deadline)
+                   for h in range(cfg.num_hosts)]
+        try:
+            run_host_writers(writers, snap, decision, qcfg, cum, unc,
+                             ctx=ctx,
+                             verify_chunks=cfg.verify_shard_chunks,
+                             commit_timeout_s=cfg.commit_timeout_s,
+                             commit_poll_s=cfg.commit_poll_s)
+        except mf.CommitRaceError:
+            # the protocol-violation tripwire (divergent manifest bytes)
+            # must NEVER be absorbed by the manifest-exists guard below —
+            # a manifest existing is this error's precondition
+            raise
+        except Exception:
+            if not self.store.exists(mf.manifest_key(step)):
+                raise
+            # a cancellation — or any host's transient phase-2 error —
+            # raced the last voter's commit: the manifest is durable, so
+            # the checkpoint IS valid. The store outranks the exception,
+            # exactly as in the multiprocess path; re-raising here would
+            # report a committed save as failed and make the step
+            # permanently unsaveable (re-saves of committed steps are
+            # refused). (Commit implies all N votes of THIS attempt
+            # landed, so every writer's stats below are complete.)
+        # on the success path the last voter wrote the manifest before its
+        # poll returned, so loading it cannot miss
+        man = mf.load(self.store, step)
 
         self._post_commit(step, decision, man.nbytes_total)
         per_host = [w.stats for w in writers]
@@ -526,6 +581,176 @@ class CheckNRunManager:
                 quantize_s=sum(s["quantize_s"] for s in per_host),
                 wall_s=time.monotonic() - t_start,
                 per_host=per_host))
+
+    # ------------------------------------- multiprocess hosts (real OS procs)
+    def _write_sharded_multiprocess(self, snap: Snapshot, cum, unc,
+                                    cancel: threading.Event, decision: str,
+                                    qcfg, ctx: CommitContext,
+                                    t_start: float,
+                                    deadline: Optional[float]
+                                    ) -> SaveResult:
+        """Spawn one OS process per host (``repro.dist.host_proc``) over the
+        shared LocalFSStore root and await the committed manifest. The
+        STORE is the source of truth: the save succeeded iff the global
+        manifest exists once every host process has exited — child exit
+        codes only feed diagnostics (a SIGKILLed host does not un-commit a
+        manifest its peers already wrote). ``write_deadline_s`` is enforced
+        on both sides: each child's pipeline aborts at the deadline, and
+        the parent SIGTERMs wedged children past it (backstop)."""
+        import shutil
+        import subprocess
+        import tempfile
+
+        from ..dist import host_proc
+
+        cfg = self.config
+        step = snap.step
+        if not isinstance(self.store, LocalFSStore):
+            raise ValueError(
+                "multiprocess sharded saves need a LocalFSStore (the only "
+                f"backend that is process-safe); got {type(self.store).__name__}")
+
+        spill = tempfile.mkdtemp(prefix=f"cnr-spill-{step}-",
+                                 dir=cfg.spill_dir)
+        procs: List[Tuple[Any, Any]] = []
+        try:
+            host_proc.write_spill(spill, snap, cum, unc, cfg, step,
+                                  cfg.num_hosts, ctx,
+                                  cfg.verify_shard_chunks)
+            env = host_proc.child_env()
+            for h in range(cfg.num_hosts):
+                cmd = host_proc.host_command(
+                    self.store.root, spill, h,
+                    poll_interval_s=cfg.commit_poll_s,
+                    commit_timeout_s=cfg.commit_timeout_s,
+                    # absolute epoch: the child's interpreter boot spends
+                    # the deadline budget, it does not extend it
+                    deadline_unix=(time.time()
+                                   + (deadline - time.monotonic())
+                                   if deadline is not None else None),
+                    watch_parent=True)
+                log = open(os.path.join(spill, f"host_{h:04d}.log"), "wb")
+                try:
+                    p = subprocess.Popen(cmd, env=env, stdout=log,
+                                         stderr=subprocess.STDOUT)
+                except BaseException:
+                    log.close()
+                    raise
+                procs.append((p, log))
+            codes, expired = self._await_host_procs(
+                [p for p, _ in procs], cancel, step, deadline)
+
+            if 5 in codes:
+                # a host detected divergent manifest bytes
+                # (CommitRaceError, exit 5): the determinism invariant
+                # was violated — surface it even though a manifest
+                # exists, never report success over it
+                raise mf.CommitRaceError(
+                    f"step {step}: a host process reported divergent "
+                    f"manifest bytes (exit codes: {codes})")
+            if not self.store.exists(mf.manifest_key(step)):
+                if cancel.is_set() or expired:
+                    raise CheckpointCancelled(
+                        f"multiprocess save step {step}")
+                err = host_proc.MultiprocessSaveError(
+                    f"step {step}: no host committed the manifest "
+                    f"(exit codes: {codes})")
+                for h in range(len(procs)):
+                    tail = self._read_log_tail(
+                        os.path.join(spill, f"host_{h:04d}.log"))
+                    if tail:
+                        err.args = (err.args[0]
+                                    + f"\n-- host {h} log tail --\n" + tail,)
+                raise err
+        except BaseException:
+            # a mid-spawn failure (fork EAGAIN, unwritable log, ...) must
+            # not leave already-launched hosts writing to the shared store
+            # (no-op for hosts that already exited)
+            self._terminate_procs([p for p, _ in procs])
+            raise
+        finally:
+            for _, log in procs:
+                log.close()
+            # the spill is a full O(snapshot) copy — never strand it, on
+            # any path (log tails are read above, before this runs)
+            shutil.rmtree(spill, ignore_errors=True)
+
+        man = mf.load(self.store, step)
+        self._post_commit(step, decision, man.nbytes_total)
+        return SaveResult(
+            step=step, kind=decision, nbytes=man.nbytes_total,
+            build_time_s=0.0, write_time_s=0.0,
+            pipeline_stats=dict(num_hosts=cfg.num_hosts, multiprocess=True,
+                                exit_codes=codes,
+                                wall_s=time.monotonic() - t_start))
+
+    @staticmethod
+    def _read_log_tail(path: str, nbytes: int = 2048) -> str:
+        try:
+            with open(path, "rb") as f:
+                f.seek(0, os.SEEK_END)
+                f.seek(max(0, f.tell() - nbytes))
+                return f.read().decode(errors="replace").strip()
+        except OSError:
+            return ""
+
+    @staticmethod
+    def _terminate_procs(procs) -> List[Optional[int]]:
+        """SIGTERM every live host process and REAP it (SIGKILL escalation
+        after 10 s, then a final wait so no zombie survives and exit codes
+        are real, not None)."""
+        for p in procs:
+            if p.poll() is None:
+                p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=10.0)
+            except Exception:
+                p.kill()
+                try:
+                    p.wait(timeout=10.0)
+                except Exception:  # pragma: no cover - unkillable child
+                    pass
+        return [p.poll() for p in procs]
+
+    def _await_host_procs(self, procs, cancel: threading.Event, step: int,
+                          deadline: Optional[float]
+                          ) -> Tuple[List[Optional[int]], bool]:
+        """Await every host process; returns (exit codes, deadline
+        expired). Fail-fast policy: once any host dies abnormally,
+        surviving hosts get ``failfast_grace_s`` to finish phase 2 (if the
+        victim died after voting, a peer commits within a poll interval),
+        then are SIGTERMed — terminating a polling or mid-merge host is
+        safe, the manifest put is atomic. A set ``cancel`` event terminates
+        all hosts immediately (§3.3); ``deadline`` (+ grace, children
+        enforce it themselves first) is the wedged-child backstop."""
+        grace = self.config.failfast_grace_s
+        grace_until = None
+        commit_grace_until = None
+        while True:
+            codes = [p.poll() for p in procs]
+            if all(c is not None for c in codes):
+                return codes, False
+            if cancel.is_set():
+                return self._terminate_procs(procs), False
+            if deadline is not None and time.monotonic() >= deadline + grace:
+                return self._terminate_procs(procs), True
+            committed = self.store.exists(mf.manifest_key(step))
+            if committed:
+                # checkpoint durable — healthy hosts observe the manifest
+                # within a poll interval and exit; a host wedged past that
+                # (stalled disk mid-fsync) must not hang save() forever
+                if commit_grace_until is None:
+                    commit_grace_until = time.monotonic() + grace
+                elif time.monotonic() >= commit_grace_until:
+                    return self._terminate_procs(procs), False
+            failed = any(c not in (None, 0) for c in codes)
+            if failed and not committed:
+                if grace_until is None:
+                    grace_until = time.monotonic() + grace
+                elif time.monotonic() >= grace_until:
+                    return self._terminate_procs(procs), False
+            time.sleep(0.02)
 
     # ---------------------------------------------------------- encode stage
     def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, clock):

@@ -221,6 +221,40 @@ def commit(store: ObjectStore, manifest: Manifest) -> None:
     store.put(manifest_key(manifest.step), manifest.to_json().encode())
 
 
+class CommitRaceError(RuntimeError):
+    """Two committers produced DIFFERENT manifest bytes for the same step —
+    a protocol violation (sharded commits must be deterministic)."""
+
+
+def commit_once(store: ObjectStore, manifest: Manifest) -> bool:
+    """Compare-and-commit for coordinator-less phase 2: any number of
+    racing committers may call this with byte-identical manifests; exactly
+    one logical commit results. Returns True if this call wrote the
+    manifest, False if an identical one was already durable. Raises
+    :class:`CommitRaceError` if a DIFFERENT manifest exists for the step
+    (deterministic serialization is the protocol invariant — see
+    ``repro.core.coordinator.build_manifest``).
+
+    The exists→put window is benign: if two racing committers both pass the
+    check, both put identical bytes and the store's last-writer-wins
+    semantics make the second put a no-op in effect."""
+    key = manifest_key(manifest.step)
+    data = manifest.to_json().encode()
+    if store.exists(key):
+        try:
+            existing = store.get(key)
+        except (KeyError, FileNotFoundError):  # pragma: no cover - narrow race
+            existing = None
+        if existing == data:
+            return False
+        raise CommitRaceError(
+            f"step {manifest.step}: a different manifest is already "
+            f"committed ({len(existing) if existing is not None else '?'} "
+            f"bytes vs {len(data)} proposed)")
+    store.put(key, data)
+    return True
+
+
 def load(store: ObjectStore, step: int) -> Manifest:
     return Manifest.from_json(store.get(manifest_key(step)).decode())
 
@@ -354,28 +388,92 @@ def _step_of_key(key: str, prefix: str) -> Optional[int]:
     return int(digits) if digits.isdigit() else None
 
 
-def gc_aborted(store: ObjectStore,
-               exclude_steps: Iterable[int] = ()) -> Dict[int, int]:
+def gc_aborted(store: ObjectStore, exclude_steps: Iterable[int] = (),
+               fence: Optional[str] = "latest",
+               skipped_out: Optional[set] = None) -> Dict[int, int]:
     """Reclaim chunk blobs and part manifests of aborted saves (no global
     manifest ⇒ the checkpoint never committed, per §3.4 its blobs are
-    garbage). Only safe while no save is in flight — the manager calls it
-    post-commit, where the non-overlap rule guarantees that. Returns
-    ``{step: deleted_key_count}``.
+    garbage). Returns ``{step: deleted_key_count}``.
 
-    Single pass: each blob namespace is listed exactly once and deletions
-    come from those listings — this runs on the writer thread after every
-    committed save, so it must not re-walk the store per aborted step."""
+    With coordinator-less commits ANY host can commit a step concurrently
+    with a sweep, so two guards protect live data:
+
+    * ``fence="latest"`` (default): steps newer than the latest committed
+      manifest are never touched — checkpoint steps are monotone, so an
+      in-flight save is always newer than the last commit and its blobs
+      (durable votes included) must not be reclaimed mid-save.
+      ``fence=None`` disables this (CLI ``gc-aborted --all``, for operators
+      who know no writer is active).
+    * every step's deletion batch re-checks the step's manifest immediately
+      before deleting — a step that committed mid-sweep (between the
+      namespace listing and the batch) is skipped, closing the
+      check-then-delete race.
+
+    Single pass over each blob namespace (listed exactly once, deletions
+    grouped per step from those listings) — this runs on the writer thread
+    after every committed save, so it must not re-walk the store per
+    aborted step. ``skipped_out`` (a set, mutated) collects the steps the
+    fence protected, in the same pass — the manager parks them and
+    reclaims each once its own committed steps pass it, without paying a
+    second namespace walk to discover them."""
     committed = set(list_steps(store))
+    latest = max(committed) if committed else None
     excluded = set(exclude_steps) | committed
-    reclaimed: Dict[int, int] = {}
-    for prefix in (CHUNK_PREFIX, PART_PREFIX):
+    by_step: Dict[int, List[str]] = {}
+    # PART_PREFIX first: within each step's batch the votes are deleted
+    # BEFORE the chunks, so a commit racing past the re-check below fails
+    # its own collect (vote missing) rather than committing a manifest
+    # whose chunk blobs this sweep is about to remove.
+    for prefix in (PART_PREFIX, CHUNK_PREFIX):
         for key in store.list(prefix):
             s = _step_of_key(key, prefix)
             if s is None or s in excluded:
                 continue
-            store.delete(key)
-            reclaimed[s] = reclaimed.get(s, 0) + 1
+            if fence == "latest" and (latest is None or s > latest):
+                if skipped_out is not None:
+                    skipped_out.add(s)
+                continue  # possibly an in-flight save — never reclaim
+            by_step.setdefault(s, []).append(key)
+    reclaimed: Dict[int, int] = {}
+    for s in sorted(by_step):
+        n = _delete_step_batch(store, s, by_step[s])
+        if n:
+            reclaimed[s] = n
     return reclaimed
+
+
+def _delete_step_batch(store: ObjectStore, s: int,
+                       keys: List[str]) -> int:
+    """Delete one aborted step's blobs (``keys`` ordered votes-first) with
+    the commit-race guards: re-check the step's manifest immediately
+    before the batch, and again after the votes are gone but before any
+    chunk blob is touched. A committer that was already past its own
+    collect when the sweep started usually lands inside one of those two
+    checks — its manifest then keeps every chunk (restore never reads the
+    parts; only ``ckpt verify``'s part-crc audit notes the reclaimed
+    votes). The guards NARROW rather than close the race: a commit put
+    landing after the second check, mid-chunk-deletion, still tears the
+    step. Closing it needs store-side transactions; until then the
+    operating rule stands — never run offline commits (``ckpt commit``)
+    concurrently with sweeps, and ``ckpt commit`` re-verifies its chunks
+    after committing and rolls back if any were swept."""
+    if store.exists(manifest_key(s)):
+        return 0  # committed mid-sweep — its blobs are live now
+    deleted = 0
+    for i, key in enumerate(keys):
+        if key.startswith(CHUNK_PREFIX):
+            # votes are gone: any commit attempt STARTING now fails its
+            # collect; one final check catches an attempt that was already
+            # merging before we swept
+            if store.exists(manifest_key(s)):
+                return deleted
+            for chunk_key in keys[i:]:
+                store.delete(chunk_key)
+                deleted += 1
+            break
+        store.delete(key)
+        deleted += 1
+    return deleted
 
 
 def gc_steps(store: ObjectStore, steps: Iterable[int]) -> Dict[int, int]:
@@ -386,11 +484,11 @@ def gc_steps(store: ObjectStore, steps: Iterable[int]) -> Dict[int, int]:
     for s in sorted(set(steps)):
         if store.exists(manifest_key(s)):
             continue
-        n = 0
-        for key in (list(store.list(chunk_prefix(s)))
-                    + list(store.list(part_prefix(s)))):
-            store.delete(key)
-            n += 1
+        # votes first (see _delete_step_batch): a racing commit loses its
+        # quorum before any chunk blob disappears
+        keys = (list(store.list(part_prefix(s)))
+                + list(store.list(chunk_prefix(s))))
+        n = _delete_step_batch(store, s, keys)
         if n:
             reclaimed[s] = n
     return reclaimed

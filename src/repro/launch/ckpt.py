@@ -5,6 +5,8 @@
   PYTHONPATH=src python -m repro.launch.ckpt verify --dir /ckpts/job-1   # fsck
   PYTHONPATH=src python -m repro.launch.ckpt gc     --dir /ckpts/job-1 --keep 2
   PYTHONPATH=src python -m repro.launch.ckpt gc-aborted --dir /ckpts/job-1
+  PYTHONPATH=src python -m repro.launch.ckpt commit --dir /ckpts/job-1 \
+      --step 12000 --num-hosts 4   # finish phase 2 from durable votes
 """
 
 from __future__ import annotations
@@ -17,10 +19,16 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("cmd", choices=["list", "show", "verify", "gc",
-                                    "gc-aborted"])
+                                    "gc-aborted", "commit"])
     ap.add_argument("--dir", required=True)
     ap.add_argument("--step", type=int, default=None)
     ap.add_argument("--keep", type=int, default=1)
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="commit: expected quorum size")
+    ap.add_argument("--all", action="store_true",
+                    help="gc-aborted: also reclaim steps newer than the "
+                         "latest committed manifest (UNSAFE unless no "
+                         "writer is active — they may be in-flight saves)")
     args = ap.parse_args(argv)
 
     from ..core import LocalFSStore, ObjectStore
@@ -29,14 +37,93 @@ def main(argv=None):
     store = LocalFSStore(args.dir)
 
     if args.cmd == "gc-aborted":
-        # reclaim chunk/part debris of crashed or cancelled saves; only run
-        # while no writer is active (the manager does this automatically
-        # after each committed save)
-        reclaimed = mf.gc_aborted(store)
+        # reclaim chunk/part debris of crashed or cancelled saves; steps
+        # newer than the latest committed manifest are protected by default
+        # (they may be an in-flight save — pass --all to override when no
+        # writer is active; the manager sweeps automatically post-commit)
+        reclaimed = mf.gc_aborted(store, fence=None if args.all else "latest")
         for s, n in reclaimed.items():
             print(f"step {s}: reclaimed {n} orphaned blobs")
         print("nothing to reclaim" if not reclaimed else
               f"reclaimed {len(reclaimed)} aborted saves")
+        return 0
+
+    if args.cmd == "commit":
+        # coordinator-less operational recovery: if every host's phase-1
+        # vote is durable but the last voter died before the manifest put,
+        # ANY process can finish phase 2 idempotently. The commit context
+        # is reconstructed from the previous committed manifest's chain
+        # position (full checkpoints only — an incremental save's policy
+        # state lives in the writer; rerun the save for those).
+        if args.step is None or args.num_hosts is None:
+            print("commit requires --step and --num-hosts")
+            return 2
+        from ..core import CommitContext, ShardCommitError, try_commit
+
+        if store.exists(mf.manifest_key(args.step)):
+            print(f"step {args.step} is already committed")
+            return 0
+        hosts = mf.list_part_hosts(store, args.step)
+        if hosts != list(range(args.num_hosts)):
+            print(f"cannot commit step {args.step}: votes present for hosts "
+                  f"{hosts}, need all of 0..{args.num_hosts - 1}")
+            return 1
+        # refuse incremental votes: this tool stamps kind="full", and an
+        # incremental save committed as "full" would silently zero every
+        # untouched row on restore. Full-save chunks are range-encoded
+        # (row_range set) and together cover every table row exactly.
+        parts = [mf.load_part(store, args.step, h)
+                 for h in range(args.num_hosts)]
+        covered: dict = {}
+        rows_of: dict = {}
+        for part in parts:
+            for name, rec in part.tables.items():
+                rows_of[name] = rec.rows
+                for ch in rec.chunks:
+                    if ch.row_range is None:
+                        print(f"commit refused: step {args.step} was an "
+                              f"INCREMENTAL save (table {name!r} has "
+                              f"index-encoded chunks); its policy state "
+                              f"lives in the writer — rerun the save")
+                        return 1
+                covered[name] = covered.get(name, 0) + sum(
+                    c.n_rows for c in rec.chunks)
+        short = {n: (covered.get(n, 0), r) for n, r in rows_of.items()
+                 if covered.get(n, 0) != r}
+        if short:
+            print(f"commit refused: step {args.step} does not cover every "
+                  f"row (stored vs total: {short})")
+            return 1
+        prev = mf.latest_step(store)
+        sample = next(iter(parts[0].tables.values()), None)
+        quant = (dict(bits=sample.bits, method=sample.method,
+                      num_bins=None, ratio=None)
+                 if sample is not None and sample.bits is not None else None)
+        ctx = CommitContext(kind="full", base_step=args.step, prev_step=prev,
+                            quant=quant, policy={"name": "full_only"},
+                            extra={"bitwidth": None,
+                                   "recovered_by": "ckpt commit"})
+        try:
+            man = try_commit(store, args.step, args.num_hosts, ctx)
+        except ShardCommitError as e:
+            print(f"commit refused: {e}")
+            return 1
+        # a GC sweep racing this offline commit can have deleted chunk
+        # blobs between our verification and the manifest put — re-verify
+        # and roll the manifest back rather than leave a torn "valid"
+        # checkpoint (see manifest._delete_step_batch)
+        missing = [ch.key for rec in man.tables.values()
+                   for ch in rec.chunks if not store.exists(ch.key)]
+        missing += [d.key for d in man.dense.values()
+                    if not store.exists(d.key)]
+        if missing:
+            store.delete(mf.manifest_key(man.step))
+            print(f"commit rolled back: {len(missing)} chunk blob(s) were "
+                  f"swept concurrently (first: {missing[0]}); re-run after "
+                  f"stopping GC")
+            return 1
+        print(f"committed step {man.step}: {man.nbytes_total:,} bytes from "
+              f"{args.num_hosts} durable parts")
         return 0
 
     steps = mf.list_steps(store)
@@ -58,7 +145,10 @@ def main(argv=None):
         m = mf.load(store, s)
         print(f"step {m.step} ({m.kind}); base={m.base_step} prev={m.prev_step}")
         print(f"policy: {m.policy.get('name')}  quant: {m.quant}")
-        print(f"total bytes: {m.nbytes_total:,}  wall: {m.wall_time_s:.2f}s")
+        # sharded manifests are byte-deterministic: no per-committer wall
+        # clock is recorded (timings live in SaveResult, not the store)
+        wall = "n/a (sharded)" if m.shards else f"{m.wall_time_s:.2f}s"
+        print(f"total bytes: {m.nbytes_total:,}  wall: {wall}")
         if m.shards:
             hosts = mf.list_part_hosts(store, m.step)
             print(f"sharded: {m.shards['num_hosts']} hosts "

@@ -246,7 +246,7 @@ def test_coordinator_refuses_missing_part(tiny_snapshot):
     coord = CommitCoordinator(store, NUM_HOSTS)
     with pytest.raises(ShardCommitError, match="host 3 missing"):
         coord.commit(1, kind="full", base_step=1, prev_step=None, quant=None,
-                     policy={"name": "one_shot"}, extra={}, wall_time_s=0.0)
+                     policy={"name": "one_shot"}, extra={})
     assert mf.list_steps(store) == []
     mgr.close()
 
@@ -257,13 +257,16 @@ def test_coordinator_refuses_missing_chunk(tiny_snapshot):
     store = InMemoryStore()
     mgr = make_mgr(store)
     mgr.save(tiny_snapshot(step=1)).result()
-    # sabotage: delete one durable chunk of host 1, keep its vote
+    # sabotage: delete one durable chunk of host 1, keep its vote — and
+    # drop the committed manifest so phase 2 actually re-runs (try_commit
+    # is idempotent: an existing manifest short-circuits it)
     victim_chunks = list(store.list(mf.chunk_host_prefix(1, 1)))
     store.delete(victim_chunks[0])
+    store.delete(mf.manifest_key(1))
     coord = CommitCoordinator(store, NUM_HOSTS)
     with pytest.raises(ShardCommitError, match="not durable"):
         coord.commit(1, kind="full", base_step=1, prev_step=None, quant=None,
-                     policy={"name": "one_shot"}, extra={}, wall_time_s=0.0)
+                     policy={"name": "one_shot"}, extra={})
     mgr.close()
 
 

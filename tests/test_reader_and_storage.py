@@ -60,6 +60,56 @@ def test_localfs_store_atomic(tmp_path):
         store.put("../escape", b"x")
 
 
+def test_localfs_put_fsyncs_parent_directory(tmp_path, monkeypatch):
+    """Durability regression: ``os.replace`` is atomic but NOT durable —
+    without an fsync of the parent dirfd after the rename, a host crash can
+    roll back a phase-1 vote or even the committed global manifest. Every
+    put must fsync the temp file, every directory it had to create, and the
+    parent directory after the rename."""
+    import os as _os
+    import stat as _stat
+
+    store = LocalFSStore(str(tmp_path))
+    synced = []  # True per dirfd fsync, False per regular-file fsync
+    real_fsync = _os.fsync
+
+    def spy(fd):
+        synced.append(_stat.S_ISDIR(_os.fstat(fd).st_mode))
+        return real_fsync(fd)
+
+    monkeypatch.setattr(_os, "fsync", spy)
+
+    store.put("parts/ckpt_000000000001/host_0000.json", b"{}")
+    assert synced.count(False) == 1          # the temp file's data
+    # created dirs (parts/, ckpt_.../) + the pre-existing root that gained
+    # an entry + the parent after the rename
+    assert synced.count(True) >= 3
+    assert synced[-1] is True                # rename durability point last
+
+    # same directory again: no new dirs — exactly file fsync then dir fsync
+    synced.clear()
+    store.put("parts/ckpt_000000000001/host_0001.json", b"{}")
+    assert synced == [False, True]
+
+
+def test_localfs_reclaim_tmp_removes_only_stale_temps(tmp_path):
+    """Writers SIGKILLed mid-put leave ``*.tmp.<pid>.<tid>`` files that
+    ``list()`` filters — so manifest-level GC never reclaims them.
+    ``reclaim_tmp`` does, honoring the age guard for in-flight puts."""
+    store = LocalFSStore(str(tmp_path))
+    store.put("a/b.bin", b"x")
+    stale = tmp_path / "a" / "c.bin.tmp.123.456"
+    stale.write_bytes(b"partial")
+    old = time.time() - 7200
+    os.utime(stale, (old, old))
+    fresh = tmp_path / "a" / "d.bin.tmp.123.457"
+    fresh.write_bytes(b"inflight")
+    assert store.reclaim_tmp(3600) == 1
+    assert not stale.exists()
+    assert fresh.exists()           # could be a live put — age-guarded
+    assert store.get("a/b.bin") == b"x"
+
+
 def test_throttled_store_rate_and_cancel():
     base = InMemoryStore()
     evt = threading.Event()

@@ -141,6 +141,39 @@ def test_host_failure_cancels_surviving_hosts(tiny_snapshot):
     mgr.close()
 
 
+def test_run_host_writers_attaches_every_host_failure():
+    """Regression: with several hosts failing independently, only the first
+    failure used to surface — the rest were silently discarded. Now every
+    other real failure rides the root exception as a note (derived
+    cancellations stay excluded), so a multi-host incident is diagnosable
+    from one traceback."""
+    from repro.dist.shard_writer import HostShardWriter, run_host_writers
+
+    class Scripted(HostShardWriter):
+        def __init__(self, host, exc):
+            super().__init__(host, 4, InMemoryStore(), encoder=None)
+            self._exc = exc
+
+        def write_part(self, snap, decision, qcfg, cum, unc):
+            if self._exc is not None:
+                raise self._exc
+            return None
+
+    class FakeSnap:
+        step = 9
+
+    writers = [Scripted(0, None),
+               Scripted(1, ValueError("host1 disk full")),
+               Scripted(2, None),
+               Scripted(3, OSError("host3 link down"))]
+    with pytest.raises(ValueError, match="host1 disk full") as ei:
+        run_host_writers(writers, FakeSnap(), "full", None, {}, {})
+    notes = getattr(ei.value, "__notes__", [])
+    assert any("raised by host 1" in n for n in notes), notes
+    assert any("host 3 also failed: OSError: host3 link down" in n
+               for n in notes), notes
+
+
 # ------------------------------------------------------------- plumbing
 def test_sharded_save_key_layout(tiny_snapshot):
     store = InMemoryStore()

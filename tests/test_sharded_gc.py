@@ -54,8 +54,11 @@ def test_gc_reclaims_aborted_save_only(tiny_snapshot):
         - committed_keys
     assert orphans  # the crash left debris (host chunks and/or votes)
 
-    reclaimed = mf.gc_aborted(store)
-    assert reclaimed == {2: len(orphans)}
+    # the fence protects step 2 while it is newer than the last commit —
+    # from the store alone it is indistinguishable from an in-flight save
+    assert mf.gc_aborted(store) == {}
+    # the operator override reclaims it (CLI gc-aborted --all)
+    assert mf.gc_aborted(store, fence=None) == {2: len(orphans)}
     # committed checkpoint untouched, orphans gone
     assert set(store.list("chunks/")) | set(store.list("parts/")) \
         == committed_keys
@@ -65,16 +68,118 @@ def test_gc_reclaims_aborted_save_only(tiny_snapshot):
     mgr.close()
 
 
+def test_gc_fence_lifts_once_newer_step_commits(tiny_snapshot):
+    """Debris older than the newest committed manifest cannot be an
+    in-flight save (steps are monotone) — the default sweep reclaims it."""
+    inner = InMemoryStore()
+    store = FailingStore(inner)
+    mgr = make_mgr(store)
+    mgr.save(tiny_snapshot(step=1)).result()
+    crash_save(store, mgr, tiny_snapshot(step=2, seed=2), victim=1,
+               fail_after=1)
+    # the manager's own post-commit pass (targeted gc_steps) reclaims the
+    # abort it witnessed when step 3 commits
+    mgr.save(tiny_snapshot(step=3, seed=3)).result()
+    assert mf.aborted_steps(store) == []
+    assert_no_torn_manifests(store)
+    # and a foreign sweeper (fresh process / CLI) is equally safe now:
+    # nothing left, nothing live touched
+    assert mf.gc_aborted(store) == {}
+    assert sorted(mf.list_steps(store)) == [1, 3]
+    mgr.close()
+
+
 def test_gc_exclude_steps_protects_in_flight(tiny_snapshot):
     inner = InMemoryStore()
     store = FailingStore(inner)
     mgr = make_mgr(store)
     crash_save(store, mgr, tiny_snapshot(step=5), victim=0, fail_after=2)
     assert mf.aborted_steps(store) == [5]
-    assert mf.gc_aborted(store, exclude_steps=[5]) == {}
+    # default fence: with no committed manifest at all, every step could be
+    # an in-flight save — the sweep must not touch anything
+    assert mf.gc_aborted(store) == {}
+    # explicit exclusion protects even under the operator override
+    assert mf.gc_aborted(store, exclude_steps=[5], fence=None) == {}
     assert mf.aborted_steps(store) == [5]  # protected
-    assert mf.gc_aborted(store)[5] > 0
+    assert mf.gc_aborted(store, fence=None)[5] > 0
     mgr.close()
+
+
+class _CommitDuringSweepStore(InMemoryStore):
+    """Commits ``step``'s manifest the first time the chunk namespace is
+    listed — the window between a GC sweep's listing and its deletions,
+    where a racing last-voter commit can land."""
+
+    def __init__(self, step: int) -> None:
+        super().__init__()
+        self.commit_step = step
+        self.armed = False
+
+    def list(self, prefix: str = ""):
+        keys = super().list(prefix)
+        if self.armed and prefix.startswith(mf.CHUNK_PREFIX):
+            self.armed = False
+            super().put(mf.manifest_key(self.commit_step), b"{}")
+        return keys
+
+
+def test_gc_aborted_skips_step_that_commits_mid_sweep():
+    """check-then-delete race regression: a step that commits between the
+    sweep's namespace listing and its deletion batch must keep every blob
+    (any host can commit concurrently now)."""
+    store = _CommitDuringSweepStore(step=2)
+    store.put(mf.manifest_key(3), b"{}")       # fence: latest committed = 3
+    debris = [f"{mf.chunk_prefix(2)}emb0/000000.bin", mf.part_key(2, 0)]
+    for k in debris:
+        store.put(k, b"blob")
+    store.armed = True
+    assert mf.gc_aborted(store) == {}          # re-check saw the commit
+    for k in debris:
+        assert store.exists(k), f"live blob {k} was reclaimed"
+
+
+class _CommitOnVoteDeleteStore(InMemoryStore):
+    """Commits ``step``'s manifest the instant its first vote is deleted —
+    modelling a committer that finished collecting votes BEFORE the sweep
+    started and lands its manifest put mid-batch."""
+
+    def __init__(self, step: int) -> None:
+        super().__init__()
+        self.commit_step = step
+        self.armed = False
+
+    def delete(self, key: str) -> None:
+        super().delete(key)
+        if self.armed and key.startswith(mf.PART_PREFIX):
+            self.armed = False
+            super().put(mf.manifest_key(self.commit_step), b"{}")
+
+
+def test_gc_spares_chunks_when_commit_lands_mid_batch():
+    """A committer already past its own collect can commit between the
+    sweep's re-check and its deletions. Votes are deleted first and the
+    chunk sub-batch re-checks once more — so the committed manifest keeps
+    every chunk blob it references (restore never reads the votes)."""
+    store = _CommitOnVoteDeleteStore(step=2)
+    store.put(mf.manifest_key(3), b"{}")       # fence: latest committed = 3
+    chunk = f"{mf.chunk_prefix(2)}emb0/000000.bin"
+    store.put(chunk, b"blob")
+    store.put(mf.part_key(2, 0), b"{}")
+    store.armed = True
+    mf.gc_aborted(store)
+    assert store.exists(chunk), "chunk of a just-committed step reclaimed"
+    assert store.exists(mf.manifest_key(2))
+
+
+def test_gc_steps_skips_step_that_commits_mid_sweep():
+    store = _CommitDuringSweepStore(step=2)
+    debris = [f"{mf.chunk_prefix(2)}emb0/000000.bin", mf.part_key(2, 0)]
+    for k in debris:
+        store.put(k, b"blob")
+    store.armed = True
+    assert mf.gc_steps(store, [2]) == {}
+    for k in debris:
+        assert store.exists(k), f"live blob {k} was reclaimed"
 
 
 def test_manager_gcs_orphans_after_next_commit(tiny_snapshot):
@@ -102,8 +207,12 @@ def test_gc_reclaims_cancelled_single_host_save(tiny_snapshot):
     # fake a cancelled save's leftovers: chunks, no manifest
     store.put(f"{mf.chunk_prefix(2)}emb0/000000.bin", b"partial")
     assert mf.aborted_steps(store) == [2]
+    assert mf.gc_aborted(store) == {}  # fenced: newer than last commit
+    mgr.save(tiny_snapshot(step=3, seed=3)).result()
+    # older than the fence now; this manager never aborted step 2 itself,
+    # so the debris waits for a namespace sweep (fresh process or CLI)
     assert mf.gc_aborted(store) == {2: 1}
-    assert mf.list_steps(store) == [1]
+    assert mf.list_steps(store) == [1, 3]
     mgr.close()
 
 

@@ -2,11 +2,12 @@
 (host-device) mesh, elastic restore across meshes, and a miniature dry-run."""
 
 import numpy as np
-import pytest
+import pytest  # noqa: F401  (parametrize-ready; keep import stable)
 
-# multi-minute training-stack tests: excluded from the fast CI set
-# (`-m "not slow"`), exercised by the scheduled full job
-pytestmark = pytest.mark.slow
+# Back in the push-time fast set: the process-wide jitted-train-step cache
+# (train/loop.py, PR 3) brought this module from multi-minute to ~30 s.
+# The remaining slow-marked suites are test_models_smoke (40-cell sweep)
+# and test_distribution (subprocess per emulated mesh).
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
