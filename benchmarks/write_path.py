@@ -2,8 +2,11 @@
 path vs the pipelined parallel engine (core/pipeline.py), the streaming
 fetch→decode→apply restore engine vs a serial chunk-by-chunk replica over a
 read-throttled store, the sharded multi-host sweep (dist/shard_writer.py —
-1/2/4/8 simulated hosts on a shared aggregate link vs per-host links), plus
-the bit-packing microbench. Writes ``BENCH_write_path.json``.
+1/2/4/8 simulated hosts on a shared aggregate link vs per-host links), the
+remote object-store section (core/remote_store.py — protocol overhead vs a
+ThrottledStore at the same modelled link, plus a seeded fault sweep that
+measures retry amplification as wire-bytes / logical-bytes), plus the
+bit-packing microbench. Writes ``BENCH_write_path.json``.
 
   PYTHONPATH=src python benchmarks/write_path.py [--tiny] [--restore-only]
                                                  [--out PATH]
@@ -414,6 +417,124 @@ def bench_multiprocess(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_remote(args, qcfg: QuantConfig) -> dict:
+    """Remote object-store section: the same sharded save driven through
+    ``RemoteObjectStore`` (core/remote_store.py) three ways —
+
+      clean:     in-process ServerTransport, no faults — the pure protocol
+                 overhead of PUT/GET/LIST + read-after-write verify on the
+                 vote/manifest keys
+      throttled: ThrottledTransport at the same link bandwidth as a
+                 ThrottledStore baseline (identical LinkModel arithmetic),
+                 so the wall-clock delta is protocol overhead, not model
+                 mismatch
+      faulty:    seeded FaultyTransport at increasing error rates — every
+                 retransmission pays wire bytes, so retry amplification
+                 (wire bytes sent / logical bytes written) is measured,
+                 not inferred
+
+    Every configuration's restore must be byte-identical to the
+    unthrottled in-memory reference restore."""
+    from repro.core.remote_store import (
+        FaultSpec,
+        RemoteObjectStore,
+        RetryPolicy,
+        ServerTransport,
+        ThrottledTransport,
+        wrap_faulty,
+    )
+
+    snap = make_workload(args.tables, args.rows, args.dim, seed=3,
+                         dense_dim=32)
+    ref_store = InMemoryStore()
+    ref_mgr = CheckNRunManager(ref_store, CheckpointConfig(
+        policy="full_only", quant=qcfg, async_write=False,
+        chunk_rows=args.chunk_rows))
+    payload = ref_mgr.save(snap).result().nbytes
+    ref = ref_mgr.restore()
+    ref_mgr.close()
+
+    retry = RetryPolicy(attempts=8, base_s=0.002, cap_s=0.05)
+
+    def run_one(store, label):
+        mgr = CheckNRunManager(store, CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows, num_hosts=2,
+            encode_workers=args.encode_workers,
+            write_workers=args.write_workers))
+        t0 = time.monotonic()
+        mgr.save(snap).result()
+        wall = time.monotonic() - t0
+        rs = mgr.restore()
+        for name in snap.tables:
+            if not np.array_equal(ref.tables[name], rs.tables[name]):
+                raise AssertionError(f"remote restore mismatch: {name} "
+                                     f"({label})")
+            if not np.array_equal(ref.row_state[name]["acc"],
+                                  rs.row_state[name]["acc"]):
+                raise AssertionError(f"remote aux mismatch: {name} ({label})")
+        for name in snap.dense:
+            if not np.array_equal(ref.dense[name], rs.dense[name]):
+                raise AssertionError(f"remote dense mismatch: {name} "
+                                     f"({label})")
+        mgr.close()
+        return wall
+
+    # clean protocol overhead (multipart exercised via a small part size)
+    clean_store = RemoteObjectStore(ServerTransport(), retry=retry,
+                                    part_size=args.remote_part_size)
+    clean_wall = run_one(clean_store, "clean")
+
+    # bandwidth-capped: ThrottledStore baseline vs remote over the same link
+    bw = payload / args.shard_target_s
+    base_wall = run_one(ThrottledStore(InMemoryStore(),
+                                       write_bytes_per_sec=bw),
+                        "throttled-store")
+    thr_store = RemoteObjectStore(
+        ThrottledTransport(ServerTransport(), write_bytes_per_sec=bw),
+        retry=retry, part_size=args.remote_part_size)
+    thr_wall = run_one(thr_store, "throttled-remote")
+
+    # seeded fault sweep: wall + retry amplification at rising error rates
+    sweep = []
+    for rate in args.remote_error_rates:
+        store = RemoteObjectStore(ServerTransport(), retry=retry,
+                                  part_size=args.remote_part_size)
+        inj = wrap_faulty(store, FaultSpec(
+            seed=7, error_rate=rate, partial_put_rate=rate / 4))
+        wall = run_one(store, f"faulty@{rate}")
+        logical = store.counters.snapshot()["bytes_written"]
+        s = store.stats.snapshot()
+        sweep.append({
+            "error_rate": rate,
+            "wall_s": round(wall, 4),
+            "injected_faults": inj.injected,
+            "requests": s["requests"],
+            "retries": s["retries"],
+            "write_amplification": round(
+                store.stats.write_amplification(logical), 3),
+        })
+
+    return {
+        "config": {"tables": args.tables, "rows": args.rows, "dim": args.dim,
+                   "bits": qcfg.bits, "method": qcfg.method,
+                   "payload_bytes": payload,
+                   "part_size": args.remote_part_size,
+                   "link_bw_mbps": round(bw / 1e6, 2)},
+        "clean": {"wall_s": round(clean_wall, 4),
+                  "mbps": round(payload / clean_wall / 1e6, 2)},
+        "throttled": {
+            "store_wall_s": round(base_wall, 4),
+            "remote_wall_s": round(thr_wall, 4),
+            # remote over the identical link model: ratio is the protocol
+            # (request framing + vote/manifest verify reads) overhead
+            "protocol_overhead": round(thr_wall / base_wall, 2),
+        },
+        "fault_sweep": sweep,
+        "restored_identical": True,
+    }
+
+
 def _touch_snap(base: Snapshot, step: int, frac: float, seed: int) -> Snapshot:
     """Derive an incremental snapshot: mutate a random ``frac`` of each
     table's rows and mark them touched."""
@@ -642,6 +763,13 @@ def main(argv=None):
                          "sharded sweep (empty string skips it)")
     ap.add_argument("--shard-target-s", type=float, default=1.2,
                     help="modelled 1-host transmission time for the sweep")
+    # ---- remote store section ----
+    ap.add_argument("--remote-error-rates", default="0.05,0.2",
+                    help="seeded fault-injection error rates for the remote "
+                         "sweep (empty string skips the remote section)")
+    ap.add_argument("--remote-part-size", type=int, default=262_144,
+                    help="multipart threshold for the remote store (small "
+                         "enough that chunk puts exercise multipart)")
     # ---- restore section ----
     ap.add_argument("--restore-chain", type=int, default=3,
                     help="incremental checkpoints replayed on top of the "
@@ -682,6 +810,8 @@ def main(argv=None):
         args.restore_repeats = 1
     args.num_hosts = [int(n) for n in str(args.num_hosts).split(",") if n]
     args.mp_hosts = [int(n) for n in str(args.mp_hosts).split(",") if n]
+    args.remote_error_rates = [float(r) for r in
+                               str(args.remote_error_rates).split(",") if r]
     if args.tiny and args.multiprocess_only:
         args.mp_hosts = [2]
 
@@ -754,6 +884,13 @@ def main(argv=None):
         sharded = bench_sharded(args, qcfg)
         print(json.dumps(sharded, indent=1))
 
+    remote = None
+    if args.remote_error_rates:
+        print(f"== remote object store (faults {args.remote_error_rates}, "
+              f"retry amplification + link-model bandwidth) ==")
+        remote = bench_remote(args, qcfg)
+        print(json.dumps(remote, indent=1))
+
     multiproc = None
     if args.multiprocess:
         print(f"== multiprocess hosts {args.mp_hosts} "
@@ -772,6 +909,7 @@ def main(argv=None):
         "end_to_end_adaptive": adaptive,
         "restore": restore,
         "sharded": sharded,
+        "remote": remote,
         "multiprocess": multiproc,
         "packing": pack,
         "acceptance": {
@@ -793,6 +931,14 @@ def main(argv=None):
                 next((r["per_host_speedup"] >= 2.0 for r in sharded["sweep"]
                       if r["num_hosts"] == 4), None)
                 if sharded else None),
+            "remote_restored_identical": (
+                remote["restored_identical"] if remote else None),
+            # retries must stay bounded: at ≤20% seeded error rate the
+            # wire bytes may not exceed 3x the logical payload
+            "remote_amplification_le_3x": (
+                all(r["write_amplification"] <= 3.0
+                    for r in remote["fault_sweep"])
+                if remote else None),
         },
     }
     with open(args.out, "w") as f:

@@ -94,10 +94,18 @@ class CheckpointConfig:
     verify_shard_chunks: bool = True       # committing host re-checks every
                                            # chunk's existence+size pre-commit
     multiprocess: bool = False             # num_hosts>1: real OS processes
-                                           # (LocalFSStore only) instead of
+                                           # over a LocalFSStore root or a
+                                           # remote store URI (multi-pod, no
+                                           # shared FS) instead of
                                            # thread-simulated hosts
     spill_dir: Optional[str] = None        # scratch dir for multiprocess
                                            # snapshot spills (default: tmp)
+    batch_fsync: bool = False              # LocalFSStore: defer chunk dirent
+                                           # fsyncs to the pre-vote flush
+                                           # (same crash-safety point)
+    remote_fault: Optional[str] = None     # test-only: seeded FaultSpec
+                                           # ("k=v,k=v") injected under each
+                                           # host process's remote transport
     commit_poll_s: float = 0.02            # phase-2 vote-poll interval
     commit_timeout_s: float = 120.0        # give up on a quorum that never
                                            # forms (a peer died pre-vote)
@@ -605,10 +613,19 @@ class CheckNRunManager:
 
         cfg = self.config
         step = snap.step
-        if not isinstance(self.store, LocalFSStore):
-            raise ValueError(
-                "multiprocess sharded saves need a LocalFSStore (the only "
-                f"backend that is process-safe); got {type(self.store).__name__}")
+        if isinstance(self.store, LocalFSStore):
+            store_arg = self.store.root
+        else:
+            # multi-pod: hosts share no filesystem — they reach the store
+            # by URI (http://host:port → RemoteObjectStore). Chunks, votes
+            # and the phase-2 commit all run over remote keys.
+            store_arg = getattr(self.store, "uri", None)
+            if not store_arg or not store_arg.startswith("http://"):
+                raise ValueError(
+                    "multiprocess sharded saves need a LocalFSStore or a "
+                    "remote store with a network-reachable URI; got "
+                    f"{type(self.store).__name__} "
+                    f"(uri={store_arg!r})")
 
         spill = tempfile.mkdtemp(prefix=f"cnr-spill-{step}-",
                                  dir=cfg.spill_dir)
@@ -620,7 +637,9 @@ class CheckNRunManager:
             env = host_proc.child_env()
             for h in range(cfg.num_hosts):
                 cmd = host_proc.host_command(
-                    self.store.root, spill, h,
+                    store_arg, spill, h,
+                    net_fault=cfg.remote_fault,
+                    batch_fsync=cfg.batch_fsync,
                     poll_interval_s=cfg.commit_poll_s,
                     commit_timeout_s=cfg.commit_timeout_s,
                     # absolute epoch: the child's interpreter boot spends

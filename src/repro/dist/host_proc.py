@@ -2,9 +2,13 @@
 
 One OS process per host: the launching manager spills the snapshot to a
 scratch directory (one ``.npy`` per array), then spawns
-``python -m repro.dist.host_proc`` once per host over a shared
-:class:`~repro.core.storage.LocalFSStore` root (process-safe: atomic
-``os.replace`` puts + directory fsync). Each host process
+``python -m repro.dist.host_proc`` once per host over a shared store —
+either a :class:`~repro.core.storage.LocalFSStore` root (process-safe:
+atomic ``os.replace`` puts + directory fsync) or, for multi-pod launches
+with NO shared filesystem, a remote object-store URI
+(``http://host:port`` → :class:`~repro.core.remote_store.
+RemoteObjectStore`; chunks, votes and the phase-2 commit all run over
+remote keys). Each host process
 
   1. memory-maps the spilled arrays and runs
      :class:`~repro.dist.shard_writer.HostShardWriter` over its row-shards
@@ -63,7 +67,7 @@ import numpy as np
 
 from ..core import manifest as mf
 from ..core.coordinator import CommitContext, build_manifest
-from ..core.storage import LocalFSStore, ObjectStore
+from ..core.storage import ObjectStore
 
 SPILL_META = "meta.json"
 SPILL_CONFIG = "config.json"
@@ -178,18 +182,27 @@ def child_env() -> Dict[str, str]:
     return env
 
 
-def host_command(root: str, spill_dir: str, host: int, *,
+def host_command(store: str, spill_dir: str, host: int, *,
                  fault: Optional[str] = None,
                  race_commit: bool = False,
                  dump_manifest: Optional[str] = None,
                  poll_interval_s: Optional[float] = None,
                  commit_timeout_s: Optional[float] = None,
                  deadline_unix: Optional[float] = None,
-                 watch_parent: bool = False) -> List[str]:
+                 watch_parent: bool = False,
+                 net_fault: Optional[str] = None,
+                 batch_fsync: bool = False) -> List[str]:
+    """``store`` is a LocalFSStore root path OR a remote store URI
+    (``http://host:port``) — :func:`~repro.core.remote_store.make_store`
+    resolves either spelling inside the child."""
     cmd = [sys.executable, "-m", "repro.dist.host_proc",
-           "--root", root, "--spill", spill_dir, "--host", str(host)]
+           "--store", store, "--spill", spill_dir, "--host", str(host)]
     if watch_parent:
         cmd += ["--watch-parent", str(os.getpid())]
+    if net_fault:
+        cmd += ["--net-fault", net_fault]
+    if batch_fsync:
+        cmd += ["--batch-fsync"]
     if fault:
         cmd += ["--fault", fault]
     if race_commit:
@@ -277,9 +290,21 @@ class _KillSwitchStore(ObjectStore):
 # ------------------------------------------------------------------ runner
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--root", required=True, help="LocalFSStore root")
+    ap.add_argument("--store", default=None,
+                    help="store spelling: LocalFSStore root path, or a "
+                         "remote URI (http://host:port) for multi-pod "
+                         "runs with no shared filesystem")
+    ap.add_argument("--root", default=None,
+                    help="alias for --store (LocalFSStore root)")
     ap.add_argument("--spill", required=True, help="spill directory")
     ap.add_argument("--host", type=int, required=True)
+    ap.add_argument("--net-fault", default=None,
+                    help="test-only seeded network fault spec "
+                         "(FaultSpec k=v,k=v) injected under a remote "
+                         "store's transport")
+    ap.add_argument("--batch-fsync", action="store_true",
+                    help="LocalFSStore: defer chunk dirent fsyncs to the "
+                         "pre-vote flush (same crash-safety point)")
     ap.add_argument("--poll-interval", type=float, default=0.02)
     ap.add_argument("--commit-timeout", type=float, default=120.0)
     ap.add_argument("--deadline-unix", type=float, default=None,
@@ -319,7 +344,18 @@ def main(argv=None) -> int:
     snap, cum, unc = load_spill(args.spill)
     assert snap.step == step, (snap.step, step)
 
-    store: ObjectStore = LocalFSStore(args.root)
+    from ..core.remote_store import (FaultSpec, RemoteObjectStore,
+                                     RemoteVerifyError, make_store,
+                                     wrap_faulty)
+
+    uri = args.store or args.root
+    if not uri:
+        ap.error("one of --store / --root is required")
+    store: ObjectStore = make_store(uri, batch_fsync=args.batch_fsync)
+    if args.net_fault:
+        if not isinstance(store, RemoteObjectStore):
+            ap.error("--net-fault needs a remote store URI")
+        wrap_faulty(store, FaultSpec.parse(args.net_fault))
     if args.fault:
         store = _KillSwitchStore(store, args.fault, step, args.host)
 
@@ -352,7 +388,10 @@ def main(argv=None) -> int:
                 _KillSwitchStore._die()
             try:
                 mf.commit_once(store, man)
-            except mf.CommitRaceError as e:
+            except (mf.CommitRaceError, RemoteVerifyError) as e:
+                # RemoteVerifyError here means the manifest's write-through
+                # readback saw DIFFERENT bytes — a racing committer with
+                # divergent output, the same invariant violation
                 print(f"host {args.host}: COMMIT RACE: {e}", flush=True)
                 return 5
             return 0
@@ -363,10 +402,12 @@ def main(argv=None) -> int:
                 poll_interval_s=args.poll_interval,
                 timeout_s=args.commit_timeout,
                 hard_deadline=deadline)
-        except mf.CommitRaceError as e:
+        except (mf.CommitRaceError, RemoteVerifyError) as e:
             # never report success over a divergent manifest — the
             # launcher keys fatality off this exit code, since bare
             # manifest existence would look like a committed save
+            # (RemoteVerifyError: the remote write-through readback saw
+            # diverging manifest bytes — same invariant violation)
             print(f"host {args.host}: COMMIT RACE: {e}", flush=True)
             return 5
         print(f"host {args.host}: {outcome}", flush=True)

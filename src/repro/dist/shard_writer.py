@@ -212,6 +212,13 @@ class HostShardWriter:
             pipe.drain()  # every chunk durable (or raise — no vote)
         finally:
             pipe.close()
+        # batch-fsync stores defer chunk dirent flushes; settle them HERE,
+        # before the vote below can land — a durable part manifest must
+        # imply durable chunks (publish_part's own durable-prefix put would
+        # also trigger the flush; this makes the ordering explicit)
+        flush = getattr(self.store, "flush_dirs", None)
+        if flush is not None:
+            flush()
 
         tables: Dict[str, mf.TableRecord] = {}
         nbytes = 0

@@ -7,6 +7,16 @@
   PYTHONPATH=src python -m repro.launch.ckpt gc-aborted --dir /ckpts/job-1
   PYTHONPATH=src python -m repro.launch.ckpt commit --dir /ckpts/job-1 \
       --step 12000 --num-hosts 4   # finish phase 2 from durable votes
+
+``--dir`` accepts a LocalFSStore root path OR a remote store URI
+(``http://host:port`` of a ``repro.core.object_server``), so every
+operator recovery flow — inspecting a torn save, finishing phase 2 from
+durable votes, reclaiming aborted debris — works without a shared
+filesystem:
+
+  PYTHONPATH=src python -m repro.launch.ckpt verify --dir http://10.0.0.5:9000
+  PYTHONPATH=src python -m repro.launch.ckpt commit --dir http://10.0.0.5:9000 \
+      --step 12000 --num-hosts 4
 """
 
 from __future__ import annotations
@@ -20,7 +30,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("cmd", choices=["list", "show", "verify", "gc",
                                     "gc-aborted", "commit"])
-    ap.add_argument("--dir", required=True)
+    ap.add_argument("--dir", required=True,
+                    help="LocalFSStore root path or remote store URI "
+                         "(http://host:port)")
     ap.add_argument("--step", type=int, default=None)
     ap.add_argument("--keep", type=int, default=1)
     ap.add_argument("--num-hosts", type=int, default=None,
@@ -31,10 +43,10 @@ def main(argv=None):
                          "writer is active — they may be in-flight saves)")
     args = ap.parse_args(argv)
 
-    from ..core import LocalFSStore, ObjectStore
+    from ..core import ObjectStore, make_store
     from ..core import manifest as mf
 
-    store = LocalFSStore(args.dir)
+    store = make_store(args.dir)
 
     if args.cmd == "gc-aborted":
         # reclaim chunk/part debris of crashed or cancelled saves; steps
@@ -177,7 +189,7 @@ def main(argv=None):
                 # every host's part manifest is durable and unmodified
                 try:
                     raw = store.get(p["key"])
-                except FileNotFoundError:
+                except (FileNotFoundError, KeyError):
                     print(f"MISSING PART {p['key']}")
                     bad += 1
                     continue
@@ -188,7 +200,7 @@ def main(argv=None):
                 for ch in rec.chunks:
                     try:
                         data = store.get(ch.key)
-                    except FileNotFoundError:
+                    except (FileNotFoundError, KeyError):
                         print(f"MISSING {ch.key}")
                         bad += 1
                         continue
@@ -198,7 +210,7 @@ def main(argv=None):
             for key_name, rec in m.dense.items():
                 try:
                     data = store.get(rec.key)
-                except FileNotFoundError:
+                except (FileNotFoundError, KeyError):
                     print(f"MISSING {rec.key}")
                     bad += 1
                     continue

@@ -190,13 +190,20 @@ def test_stale_vote_from_prior_attempt_cannot_commit(tiny_snapshot):
     ref = capture(mgr.restore())
 
     # attempt 1 at step 2: host 3 dies exactly at its vote → hosts 0-2
-    # leave durable stale votes for step 2
+    # leave durable stale votes for step 2. The fail-fast cancel races
+    # the surviving hosts' votes, so repeat the aborted attempt (a
+    # same-step retry purges leftovers first) until host 1's stale vote
+    # is durable — the precondition the laundering check below needs.
     snap2 = dataclasses.replace(touch(snap, rng), step=2)
-    store.arm(lambda k: k == mf.part_key(2, 3), 0)
-    with pytest.raises(InjectedWriteError):
-        mgr.save(snap2).result()
-    store.disarm()
-    assert mf.list_part_hosts(store, 2) == [0, 1, 2]
+    for _ in range(20):
+        store.arm(lambda k: k == mf.part_key(2, 3), 0)
+        with pytest.raises(InjectedWriteError):
+            mgr.save(snap2).result()
+        store.disarm()
+        if store.exists(mf.part_key(2, 1)):
+            break
+    voted = mf.list_part_hosts(store, 2)
+    assert 1 in voted and 3 not in voted
 
     # attempt 2 at the same step with DIFFERENT data: host 1 dies before
     # writing anything, so only its stale attempt-1 vote could vouch for it
@@ -241,10 +248,15 @@ def test_coordinator_refuses_missing_part(tiny_snapshot):
     with pytest.raises(InjectedWriteError):
         mgr.save(snap).result()
     store.disarm()
-    assert mf.list_part_hosts(store, 1) == [0, 1, 2]
+    # host 3's vote must be absent; hosts 0-2 voted UNLESS the fail-fast
+    # cancel pre-empted them first (the cancel event races their votes —
+    # any subset of {0,1,2} is a legal surviving state)
+    voted = mf.list_part_hosts(store, 1)
+    assert 3 not in voted
+    assert set(voted) <= {0, 1, 2}
 
     coord = CommitCoordinator(store, NUM_HOSTS)
-    with pytest.raises(ShardCommitError, match="host 3 missing"):
+    with pytest.raises(ShardCommitError, match="missing"):
         coord.commit(1, kind="full", base_step=1, prev_step=None, quant=None,
                      policy={"name": "one_shot"}, extra={})
     assert mf.list_steps(store) == []

@@ -154,3 +154,74 @@ def test_throttled_store_shares_one_link():
     elapsed = time.monotonic() - t0
     assert elapsed >= 0.15, elapsed  # serial-equivalent transmission time
     assert all(store.exists(f"k{i}") for i in range(4))
+
+
+# ---------------------------------------------------------- batch fsync
+def _fsync_spy(monkeypatch):
+    """Record True per DIRECTORY fsync, False per regular-file fsync."""
+    import os as _os
+    import stat as _stat
+
+    synced = []
+    real_fsync = _os.fsync
+
+    def spy(fd):
+        synced.append(_stat.S_ISDIR(_os.fstat(fd).st_mode))
+        return real_fsync(fd)
+
+    monkeypatch.setattr(_os, "fsync", spy)
+    return synced
+
+
+def test_batch_fsync_defers_chunk_dirents(tmp_path, monkeypatch):
+    """batch_fsync=True: chunk puts pay only the FILE-data fsync; dirent
+    flushes accumulate in the dirty set until flush_dirs()."""
+    store = LocalFSStore(str(tmp_path), batch_fsync=True)
+    synced = _fsync_spy(monkeypatch)
+
+    for i in range(6):
+        store.put(f"chunks/ckpt_000000000001/host_0000/t/{i:04d}.bin", b"x")
+    assert synced.count(False) == 6      # file-data fsyncs never deferred
+    assert synced.count(True) == 0       # zero dirent flushes so far
+
+    assert store.flush_dirs() >= 1       # settles every dirty directory
+    assert synced.count(True) >= 1
+    n_dirs = synced.count(True)
+    assert store.flush_dirs() == 0       # idempotent — dirty set drained
+    assert synced.count(True) == n_dirs
+
+
+def test_batch_fsync_vote_put_flushes_chunks_before_vote(tmp_path,
+                                                         monkeypatch):
+    """The crash-safety point is unchanged: a put to the durable vote
+    namespace flushes the deferred chunk dirents BEFORE its own rename
+    durability point — a durable vote always implies durable chunks."""
+    store = LocalFSStore(str(tmp_path), batch_fsync=True)
+    store.put("chunks/ckpt_000000000001/host_0000/t/0000.bin", b"chunk")
+    synced = _fsync_spy(monkeypatch)
+
+    store.put("parts/ckpt_000000000001/host_0000.json", b"{}")
+    # exactly one file fsync (the vote tmp); dirent flushes include the
+    # deferred chunk dirs, with the vote's rename durability point LAST
+    assert synced.count(False) == 1
+    assert synced.count(True) >= 3       # chunk dirs + parts dirs + parent
+    assert synced[-1] is True
+    assert not store._dirty_dirs         # dirty set fully drained
+
+
+def test_batch_fsync_same_bytes_as_eager(tmp_path):
+    """Deferral changes flush timing only — stored bytes and listings are
+    identical to the eager store."""
+    eager = LocalFSStore(str(tmp_path / "eager"))
+    batch = LocalFSStore(str(tmp_path / "batch"), batch_fsync=True)
+    keys = ([f"chunks/ckpt_000000000001/host_0000/t/{i:04d}.bin"
+             for i in range(5)]
+            + ["parts/ckpt_000000000001/host_0000.json",
+               "manifests/ckpt_000000000001.json"])
+    for k in keys:
+        eager.put(k, k.encode())
+        batch.put(k, k.encode())
+    batch.flush_dirs()
+    assert list(eager.list("")) == list(batch.list(""))
+    for k in keys:
+        assert eager.get(k) == batch.get(k)

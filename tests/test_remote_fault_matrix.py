@@ -1,0 +1,239 @@
+"""Seeded network-fault matrix over the sharded two-phase commit.
+
+Every request the protocol makes — chunk puts, the phase-1 vote put, the
+phase-2 list/poll, the manifest commit itself — flows through a
+FaultyTransport with deterministic seeded faults (connection resets with
+request-lost AND response-lost halves, partial puts, slow-request
+timeouts, list visibility lag). The invariant under test is Check-N-Run's
+atomicity guarantee: a save either commits fully, or the previous
+committed step stays restorable byte-identically — never a torn state —
+and retries never double-commit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CheckNRunManager, CheckpointConfig
+from repro.core import manifest as mf
+from repro.core.remote_store import (
+    FaultSpec,
+    RemoteObjectStore,
+    Response,
+    RetriesExhaustedError,
+    RetryPolicy,
+    ServerTransport,
+    TransportConnectionReset,
+    wrap_faulty,
+)
+
+from tests.fault_injection import assert_no_torn_manifests
+
+FAST = dict(base_s=0.0005, cap_s=0.005)
+
+
+def make_remote(attempts=8):
+    return RemoteObjectStore(ServerTransport(), part_size=1 << 20,
+                             retry=RetryPolicy(attempts=attempts, **FAST))
+
+
+def make_cfg(**kw):
+    kw.setdefault("policy", "full_only")
+    kw.setdefault("num_hosts", 4)
+    kw.setdefault("async_write", False)
+    kw.setdefault("commit_timeout_s", 20.0)
+    return CheckpointConfig(**kw)
+
+
+def restore_arrays(store, cfg=None):
+    mgr = CheckNRunManager(store, cfg or make_cfg())
+    try:
+        r = mgr.restore()
+    finally:
+        mgr.close()
+    return r
+
+
+def assert_restores_equal(a, b):
+    assert a.step == b.step
+    assert sorted(a.tables) == sorted(b.tables)
+    for n in a.tables:
+        np.testing.assert_array_equal(a.tables[n], b.tables[n])
+        for aux in a.row_state.get(n, {}):
+            np.testing.assert_array_equal(a.row_state[n][aux],
+                                          b.row_state[n][aux])
+    for n in a.dense:
+        np.testing.assert_array_equal(a.dense[n], b.dense[n])
+
+
+@pytest.mark.parametrize("seed,error_rate", [
+    (3, 0.05), (7, 0.2), (11, 0.2),
+])
+def test_sharded_save_commits_through_seeded_faults(tiny_snapshot, seed,
+                                                    error_rate):
+    """4-host save with faults at EVERY protocol point at up to 20% error
+    rate: must commit, and restore byte-identically to a clean-path save
+    of the same snapshot."""
+    snap = tiny_snapshot(step=1)
+    store = make_remote()
+    inj = wrap_faulty(store, FaultSpec(
+        seed=seed, error_rate=error_rate, partial_put_rate=0.05,
+        slow_rate=0.05, slow_s=0.001, list_lag=2))
+    mgr = CheckNRunManager(store, make_cfg())
+    try:
+        res = mgr.save(snap, block=True).result()
+        assert res.step == 1
+        got = mgr.restore()
+    finally:
+        mgr.close()
+    assert inj.injected > 0, "matrix point exercised no faults"
+    assert_no_torn_manifests(store)
+
+    clean = make_remote()
+    mgr2 = CheckNRunManager(clean, make_cfg())
+    try:
+        mgr2.save(tiny_snapshot(step=1), block=True).result()
+        want = mgr2.restore()
+    finally:
+        mgr2.close()
+    assert_restores_equal(got, want)
+
+
+def test_save_failure_never_tears_previous_step(tiny_snapshot):
+    """When faults overwhelm the retry budget mid-save, the store must
+    hold either the new committed step or the previous one intact —
+    atomicity at the manifest boundary, over a lossy network."""
+    store = make_remote(attempts=2)
+    mgr = CheckNRunManager(store, make_cfg())
+    try:
+        mgr.save(tiny_snapshot(step=1), block=True).result()
+        ref = mgr.restore()
+
+        inj = wrap_faulty(store, FaultSpec(seed=5, error_rate=0.75,
+                                           partial_put_rate=0.1))
+        try:
+            mgr.save(tiny_snapshot(step=2, seed=9), block=True).result()
+            save_raised = False
+        except Exception:
+            save_raised = True
+        # heal the network FIRST: the store is the source of truth, and
+        # the surviving state must be fully readable once it recovers
+        inj.spec = FaultSpec(seed=5)
+        committed_2 = (not save_raised
+                       or store.exists(mf.manifest_key(2)))
+        assert_no_torn_manifests(store)
+        got = mgr.restore()
+    finally:
+        mgr.close()
+    if committed_2:
+        assert got.step == 2
+    else:
+        assert got.step == 1
+        assert_restores_equal(got, ref)
+
+
+def test_duplicate_manifest_delivery_never_double_commits(tiny_snapshot):
+    """Force a response-lost fault on the FIRST manifest PUT: the commit
+    applies server-side, the client retries the identical put, and the
+    duplicate delivery is absorbed — one manifest, the committed bytes."""
+    class DropFirstManifestAck(ServerTransport):
+        def __init__(self):
+            super().__init__()
+            self.dropped = 0
+
+        def request(self, method, path, body=b"", params=None,
+                    timeout_s=None):
+            resp = super().request(method, path, body=body, params=params)
+            if (method == "PUT" and "/o/manifests/" in path
+                    and self.dropped == 0):
+                self.dropped += 1
+                raise TransportConnectionReset("injected: manifest ack lost")
+            return resp
+
+    transport = DropFirstManifestAck()
+    store = RemoteObjectStore(transport, retry=RetryPolicy(**FAST))
+    mgr = CheckNRunManager(store, make_cfg())
+    try:
+        res = mgr.save(tiny_snapshot(step=1), block=True).result()
+        assert res.step == 1
+    finally:
+        mgr.close()
+    assert transport.dropped == 1
+    manifests = [k for k in store.list("manifests/")]
+    assert manifests == [mf.manifest_key(1)]
+    assert_no_torn_manifests(store)
+
+
+def test_vote_retry_after_lost_ack_is_absorbed(tiny_snapshot):
+    """Same duplicate-delivery torture at the phase-1 vote: the retried
+    part-manifest put must not fork the vote or stall the quorum."""
+    class DropFirstVoteAck(ServerTransport):
+        def __init__(self):
+            super().__init__()
+            self.dropped = 0
+
+        def request(self, method, path, body=b"", params=None,
+                    timeout_s=None):
+            resp = super().request(method, path, body=body, params=params)
+            if (method == "PUT" and "/o/parts/" in path
+                    and self.dropped == 0):
+                self.dropped += 1
+                raise TransportConnectionReset("injected: vote ack lost")
+            return resp
+
+    transport = DropFirstVoteAck()
+    store = RemoteObjectStore(transport, retry=RetryPolicy(**FAST))
+    mgr = CheckNRunManager(store, make_cfg())
+    try:
+        mgr.save(tiny_snapshot(step=1), block=True).result()
+    finally:
+        mgr.close()
+    assert transport.dropped == 1
+    assert mf.list_part_hosts(store, 1) == [0, 1, 2, 3]
+    assert_no_torn_manifests(store)
+
+
+# --------------------------------------------- restore under transient GETs
+def test_restore_retries_transient_gets_byte_identical(tiny_snapshot):
+    """RestorePipeline over a flaky store: every chunk GET can fault
+    transiently; the restored state must still be byte-identical —
+    including an incremental chain replay."""
+    store = make_remote()
+    cfg = make_cfg(policy="consecutive", num_hosts=1)
+    mgr = CheckNRunManager(store, cfg)
+    try:
+        mgr.save(tiny_snapshot(step=1), block=True).result()
+        touched = {f"emb{i}": np.zeros(300 + 37 * i, bool)
+                   for i in range(2)}
+        for t in touched.values():
+            t[::5] = True
+        mgr.save(tiny_snapshot(step=2, seed=4, touched=touched),
+                 block=True).result()
+        want = mgr.restore()
+    finally:
+        mgr.close()
+
+    inj = wrap_faulty(store, FaultSpec(seed=13, error_rate=0.25,
+                                       slow_rate=0.05, slow_s=0.001))
+    got = restore_arrays(store, cfg)
+    assert inj.injected > 0
+    assert got.chain_len == want.chain_len == 2
+    assert_restores_equal(got, want)
+
+
+def test_restore_surfaces_fatal_error_when_retries_exhausted(tiny_snapshot):
+    """A dead network mid-chain must surface RetriesExhaustedError from
+    the drain — promptly, not hang the pipeline."""
+    store = make_remote(attempts=2)
+    mgr = CheckNRunManager(store, make_cfg(num_hosts=1))
+    try:
+        mgr.save(tiny_snapshot(step=1), block=True).result()
+    finally:
+        mgr.close()
+
+    wrap_faulty(store, FaultSpec(seed=1, error_rate=1.0))
+    mgr2 = CheckNRunManager(store, make_cfg(num_hosts=1))
+    try:
+        with pytest.raises((RetriesExhaustedError, FileNotFoundError)):
+            mgr2.restore()
+    finally:
+        mgr2.close()

@@ -1,0 +1,63 @@
+"""Nightly seeded flaky-store soak: many (seed x error-rate) rows of the
+remote fault matrix, each driving a full 4-host sharded save AND a
+faulted restore over a ``FaultyTransport``.
+
+The push-time suite runs a small default grid (the ``slow`` marker keeps
+even that out of the fast set); the nightly CI job widens it via
+``CNR_SOAK_SEEDS`` — same test, more seeds, no code fork between local
+and CI coverage. Every row asserts the Check-N-Run atomicity contract:
+the save commits, restores byte-identically to a clean-path save, and no
+torn manifest ever exists.
+"""
+
+import os
+
+import pytest
+
+from repro.core import CheckNRunManager
+from repro.core.remote_store import FaultSpec, wrap_faulty
+from tests.fault_injection import assert_no_torn_manifests
+from tests.test_remote_fault_matrix import (
+    assert_restores_equal,
+    make_cfg,
+    make_remote,
+    restore_arrays,
+)
+
+SEEDS = range(100, 100 + int(os.environ.get("CNR_SOAK_SEEDS", "3")))
+ERROR_RATES = (0.1, 0.2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("error_rate", ERROR_RATES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_soak_sharded_commit_and_restore_under_faults(tiny_snapshot, seed,
+                                                      error_rate):
+    snap = tiny_snapshot(step=1)
+    store = make_remote()
+    inj = wrap_faulty(store, FaultSpec(
+        seed=seed, error_rate=error_rate, partial_put_rate=error_rate / 4,
+        slow_rate=0.05, slow_s=0.001, list_lag=1))
+    mgr = CheckNRunManager(store, make_cfg())
+    try:
+        res = mgr.save(snap, block=True).result()
+        assert res.step == 1
+    finally:
+        mgr.close()
+    assert inj.injected > 0, "soak row exercised no faults"
+    assert_no_torn_manifests(store)
+
+    # restore through a RE-seeded injector so the read path draws its own
+    # fault schedule rather than replaying the write path's
+    inj.spec = FaultSpec(seed=seed + 7919, error_rate=error_rate,
+                         slow_rate=0.05, slow_s=0.001)
+    got = restore_arrays(store)
+
+    clean = make_remote()
+    mgr2 = CheckNRunManager(clean, make_cfg())
+    try:
+        mgr2.save(tiny_snapshot(step=1), block=True).result()
+        want = mgr2.restore()
+    finally:
+        mgr2.close()
+    assert_restores_equal(got, want)
