@@ -44,6 +44,7 @@ from repro.core import (
     host_link,
     quantize,
 )
+from repro.core import integrity
 from repro.core import manifest as mf
 from repro.core import packing
 from repro.core.snapshot import Snapshot
@@ -581,7 +582,7 @@ def serial_seed_restore(mgr: CheckNRunManager, store: ObjectStore,
                 data = store.get(ch.key)
                 fetch_s += time.monotonic() - t1
                 t1 = time.monotonic()
-                decoded = mgr._decode_chunk(rec, ch, data)
+                decoded = mgr._decode_chunk(man.step, name, rec, ch, data)
                 mgr._apply_decoded(tables[name], row_state[name], rec, ch,
                                    0, decoded)
                 decode_s += time.monotonic() - t1
@@ -591,7 +592,7 @@ def serial_seed_restore(mgr: CheckNRunManager, store: ObjectStore,
         t1 = time.monotonic()
         data = store.get(drec.key)
         fetch_s += time.monotonic() - t1
-        dense[key_name] = mgr._decode_dense(drec, data)
+        dense[key_name] = mgr._decode_dense(final.step, key_name, drec, data)
     return dict(wall_s=time.monotonic() - t0, fetch_s=fetch_s,
                 decode_s=decode_s, tables=tables, row_state=row_state,
                 dense=dense, chain_len=len(chain))
@@ -681,6 +682,22 @@ def bench_restore(args, qcfg: QuantConfig) -> dict:
             raise AssertionError(f"streaming dense mismatch: {name}")
     mgr.close()
 
+    # integrity gate: a deep scan (size + crc32 + hash32 of every chunk in
+    # the chain) over the unthrottled blobs must come back clean — the same
+    # pass `ckpt scan` runs, timed here so scan-cost regressions surface
+    t0 = time.monotonic()
+    scan = integrity.scan_store(store, deep=True)
+    scan_wall = time.monotonic() - t0
+    if not scan.ok:
+        raise AssertionError(
+            f"integrity scan found problems: {[p.to_dict() for p in scan.problems]}")
+    scan_stats = {
+        "wall_s": round(scan_wall, 4),
+        "chunks": sum(r.chunks_checked for r in scan.steps.values()),
+        "bytes": sum(r.bytes_checked for r in scan.steps.values()),
+        "ok": True,
+    }
+
     return {
         "config": {
             "tables": args.tables, "rows": args.rows, "dim": args.dim,
@@ -708,6 +725,7 @@ def bench_restore(args, qcfg: QuantConfig) -> dict:
         },
         "speedup_restore": round(serial["wall_s"] / stream_wall, 2),
         "restored_identical": True,
+        "integrity_scan": scan_stats,
     }
 
 

@@ -9,7 +9,26 @@ from .coordinator import (
     build_manifest,
     try_commit,
 )
+from .integrity import (
+    ChunkCorruptionError,
+    Problem,
+    ResumePlan,
+    ScanReport,
+    StepReport,
+    plan_resume,
+    quarantine_step,
+    quarantined_steps,
+    scan_step,
+    scan_store,
+    verify_chunk_bytes,
+)
 from .manifest import CommitRaceError, commit_once
+from .metrics import (
+    ManagerMetrics,
+    render_prometheus,
+    store_metrics,
+    write_textfile,
+)
 from .pipeline import PipelineStats, RestorePipeline, StagePipeline, WritePipeline
 from .incremental import (
     ConsecutiveIncrement,

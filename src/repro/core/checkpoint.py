@@ -48,6 +48,8 @@ from . import tracker
 from .bitwidth import BitwidthController
 from .coordinator import CommitContext
 from .incremental import IncrementalPolicy, make_policy
+from .integrity import ChunkCorruptionError, verify_chunk_bytes
+from .metrics import ManagerMetrics
 from .pipeline import RestorePipeline, WritePipeline
 from .quantize import (
     PAPER_DEFAULTS,
@@ -88,6 +90,10 @@ class CheckpointConfig:
     decode_workers: int = 2                # parallel unpack+dequant threads
     restore_inflight: Optional[int] = None  # fetched-chunk window bound
     quant_impl: str = "auto"               # kernels/adaptive_quant impl knob
+    chunk_hash: bool = True                # record a per-chunk content hash
+                                           # (on device alongside quant_pack
+                                           # — kernels/chunk_hash); decode
+                                           # and `ckpt scan` verify it
     # ---- sharded multi-host writers (docs/sharded_writers.md) ----
     num_hosts: int = 1                     # >1 → per-host shard writers with
                                            # two-phase manifest commit
@@ -138,6 +144,10 @@ class RestoredState:
     chain_len: int
     # restore-pipeline counters (wall_s, payload_bytes, occupancy per stage)
     stats: Optional[dict] = None
+    # set when restore(on_corruption="fallback") replanned: the step the
+    # caller ASKED for (corrupt); ``step`` is the older chain actually
+    # restored — callers must treat the gap as lost training to redo
+    degraded_from: Optional[int] = None
 
 
 class _QuantClock:
@@ -186,6 +196,40 @@ class CheckNRunManager:
         self._aborted_steps: set = set()
         self._gc_pending: set = set()
         self._gc_swept = False
+        # Lifetime operational counters (ckpt emit-metrics / dashboards);
+        # mutated on the writer thread AND the restoring thread, hence the
+        # dedicated lock (NOT self._lock — metrics updates must never
+        # contend with the touched-row hot path).
+        self._metrics = ManagerMetrics()
+        self._metrics_lock = threading.Lock()
+
+    def _count(self, **deltas) -> None:
+        """Add to counter fields / assign gauge fields of the metrics
+        snapshot (None-valued gauges are assigned, counters summed)."""
+        with self._metrics_lock:
+            for k, v in deltas.items():
+                cur = getattr(self._metrics, k)
+                if isinstance(cur, int) and isinstance(v, int) and not k.startswith("last_"):
+                    setattr(self._metrics, k, cur + v)
+                else:
+                    setattr(self._metrics, k, v)
+
+    def metrics(self) -> ManagerMetrics:
+        """One consistent snapshot of the manager's lifetime counters,
+        merged with the store's logical counters and (remote stores) the
+        transport's wire stats."""
+        with self._metrics_lock:
+            snap = dataclasses.replace(
+                self._metrics,
+                save_occupancy=dict(self._metrics.save_occupancy),
+                restore_occupancy=dict(self._metrics.restore_occupancy))
+        snap.store = self.store.counters.snapshot()
+        stats = getattr(self.store, "stats", None)
+        snap.remote = (stats.snapshot()
+                       if stats is not None and hasattr(stats, "snapshot")
+                       else {})
+        snap.captured_unix = time.time()
+        return snap
 
     # ------------------------------------------------------------------ save
     def save(self, snap: Snapshot, block: bool = False) -> Future:
@@ -242,15 +286,23 @@ class CheckNRunManager:
     # ------------------------------------------------------------- internals
     def _write_guarded(self, snap, cum, unc, cancel) -> SaveResult:
         try:
-            return self._write(snap, cum, unc, cancel)
+            res = self._write(snap, cum, unc, cancel)
         except CheckpointCancelled:
             self._aborted_steps.add(snap.step)
+            self._count(saves_total=1, saves_cancelled=1)
             return SaveResult(step=snap.step, kind="cancelled", nbytes=0,
                               build_time_s=0.0, write_time_s=0.0, cancelled=True)
         except Exception:
             self._aborted_steps.add(snap.step)
+            self._count(saves_total=1, saves_failed=1)
             traceback.print_exc()
             raise
+        self._count(saves_total=1, saves_ok=1, save_bytes_total=res.nbytes,
+                    last_success_step=res.step, last_success_unix=time.time(),
+                    last_save_kind=res.kind,
+                    save_occupancy=dict((res.pipeline_stats or {})
+                                        .get("occupancy", {})))
+        return res
 
     def _select_rows(self, decision: str, name: str, rows: int,
                      cum: Dict[str, np.ndarray], unc: Dict[str, np.ndarray],
@@ -290,17 +342,51 @@ class CheckNRunManager:
                 cls._quant_ops = False
         return cls._quant_ops or None
 
+    _hash_ops = None  # class-level cache for the lazy chunk-hash import
+
+    @classmethod
+    def _kernel_hash_ops(cls):
+        """Lazy import of the on-device content hash (mirrors
+        :meth:`_kernel_quant_ops`). Returns (chunk_hash32_device,
+        chunk_hash32, impl_map) or None."""
+        if cls._hash_ops is None:
+            try:
+                from ..kernels.chunk_hash.ops import (_impl_for,
+                                                      chunk_hash32,
+                                                      chunk_hash32_device)
+                cls._hash_ops = (chunk_hash32_device, chunk_hash32, _impl_for)
+            except ImportError:
+                cls._hash_ops = False
+        return cls._hash_ops or None
+
+    def _payload_hash32(self, payload: bytes) -> Optional[int]:
+        """Host-side content hash of a serialized section (the fallback
+        when the packed words never lived on device)."""
+        ops = self._kernel_hash_ops()
+        if not self.config.chunk_hash or ops is None:
+            return None
+        return ops[1](payload)
+
     def _quant_encode(self, rows_arr: np.ndarray, qcfg: QuantConfig):
         """Quantize + bit-pack one chunk of rows. Returns (scale f32,
-        zero f32, packed-codes payload bytes).
+        zero f32, packed-codes payload bytes, hash32-or-None).
 
         Fast path (``fused_pack``): the fused kernel/jitted-jnp op emits the
         packed word stream on device — only ``bits/8`` bytes per code cross
         to the host and the encode stage shrinks to header assembly. The
         host fallback (``fused_pack=False`` or unsupported method) runs the
         SAME quantizer where available, then ``packing.pack_bits``; both
-        paths produce byte-identical payloads."""
+        paths produce byte-identical payloads.
+
+        With ``chunk_hash`` the fused path also hashes the packed word
+        stream ON DEVICE (kernels/chunk_hash) before it crosses to the
+        host — the hash witnesses the bytes as the accelerator produced
+        them, a coverage the host-computed crc32 cannot give. The host
+        fallbacks hash the serialized payload; byte-identical payloads
+        mean identical hashes either way."""
         ops = self._kernel_quant_ops()
+        hash_ops = (self._kernel_hash_ops()
+                    if self.config.chunk_hash else None)
         if ops is not None and qcfg.method in ("adaptive", "uniform_asym"):
             quant_pack_op, quant_codes_op = ops
             import jax.numpy as jnp
@@ -310,16 +396,26 @@ class CheckNRunManager:
                       impl=self.config.quant_impl)
             if self.config.fused_pack:
                 pq = quant_pack_op(xj, **kw)
+                h = None
+                if hash_ops is not None:
+                    hash_dev, _, impl_for = hash_ops
+                    # hash exactly the words the payload serializes:
+                    # ceil(payload_nbytes / 4), tail bits zero by packing
+                    nbytes = (int(pq.count) * qcfg.bits + 7) // 8
+                    h = hash_dev(pq.words, count=(nbytes + 3) // 4,
+                                 impl=impl_for(self.config.quant_impl))
                 return (np.asarray(pq.scale), np.asarray(pq.zero),
                         packing.words_to_payload(np.asarray(pq.words),
-                                                 pq.count, qcfg.bits))
+                                                 pq.count, qcfg.bits), h)
             q = quant_codes_op(xj, **kw)
-            return (np.asarray(q.scale), np.asarray(q.zero),
-                    packing.pack_bits(np.asarray(q.codes), qcfg.bits))
+            payload = packing.pack_bits(np.asarray(q.codes), qcfg.bits)
+            return (np.asarray(q.scale), np.asarray(q.zero), payload,
+                    self._payload_hash32(payload))
         q = quantize(rows_arr, qcfg)
+        payload = packing.pack_bits(np.asarray(q.codes), qcfg.bits)
         return (np.asarray(q.scale, dtype=np.float32),
-                np.asarray(q.zero, dtype=np.float32),
-                packing.pack_bits(np.asarray(q.codes), qcfg.bits))
+                np.asarray(q.zero, dtype=np.float32), payload,
+                self._payload_hash32(payload))
 
     # ------------------------------------------------- shared write plumbing
     def _make_pipeline(self, cancel, deadline) -> WritePipeline:
@@ -465,8 +561,10 @@ class CheckNRunManager:
                                      for k, v in self._cum_touched.items()}
             self._uncommitted = {k: np.zeros_like(v)
                                  for k, v in self._uncommitted.items()}
-        mf.apply_retention(self.store, self.config.keep_latest,
-                           self.config.ttl_days)
+        retained = mf.apply_retention(self.store, self.config.keep_latest,
+                                      self.config.ttl_days)
+        if retained:
+            self._count(retention_steps_deleted_total=len(retained))
         # Reclaim aborted/cancelled saves' debris: one full sweep per
         # process (debris a crashed predecessor left), then only the steps
         # this process actually aborted — keeps the post-commit cost
@@ -475,7 +573,10 @@ class CheckNRunManager:
         # restore point) are reclaimed as soon as our committed steps
         # catch up — past `step` they can no longer be an in-flight save.
         if not self._gc_swept:
-            mf.gc_aborted(self.store, skipped_out=self._gc_pending)
+            swept = mf.gc_aborted(self.store, skipped_out=self._gc_pending)
+            if swept:
+                self._count(gc_steps_reclaimed_total=len(swept),
+                            gc_keys_reclaimed_total=sum(swept.values()))
             if isinstance(self.store, LocalFSStore):
                 # terminated writers' half-written temp files are invisible
                 # to the manifest-level GC (list() filters them)
@@ -483,7 +584,10 @@ class CheckNRunManager:
             self._gc_swept = True
         due = {s for s in self._gc_pending if s <= step}
         if self._aborted_steps or due:
-            mf.gc_steps(self.store, self._aborted_steps | due)
+            reclaimed = mf.gc_steps(self.store, self._aborted_steps | due)
+            if reclaimed:
+                self._count(gc_steps_reclaimed_total=len(reclaimed),
+                            gc_keys_reclaimed_total=sum(reclaimed.values()))
             self._gc_pending -= due
         self._aborted_steps.clear()
 
@@ -773,14 +877,14 @@ class CheckNRunManager:
 
     # ---------------------------------------------------------- encode stage
     def _encode_chunk_job(self, key: str, tab, idx, aux, qcfg, full, clock):
-        payload, sections = self._encode_chunk(tab, idx, aux, qcfg, full,
-                                               clock)
+        payload, sections, hash32 = self._encode_chunk(tab, idx, aux, qcfg,
+                                                       full, clock)
         row_range = ([int(idx[0]), int(idx[-1]) + 1]
                      if full and len(idx) else None)
         rec = mf.ChunkRecord(
             key=key, n_rows=int(len(idx)), nbytes=len(payload),
             crc32=ObjectStore.checksum(payload), sections=sections,
-            row_range=row_range)
+            row_range=row_range, hash32=hash32)
         return payload, rec
 
     def _encode_dense_job(self, key: str, arr: np.ndarray):
@@ -795,6 +899,9 @@ class CheckNRunManager:
                       full: bool, clock: Optional[_QuantClock] = None):
         """Serialize one chunk of rows: [indices?][scale][zero][codes][aux...]
         (full-checkpoint chunks are contiguous → range-encoded, no indices).
+        Returns (payload, sections, hash32) — hash32 covers the PRIMARY
+        section (codes / values; ``integrity.primary_section``), computed
+        on device for the fused path.
 
         With the fused quantize+pack path the quantized sections arrive
         packed from the device, so this reduces to header assembly: section
@@ -802,6 +909,7 @@ class CheckNRunManager:
         parts = []
         sections: Dict[str, list] = {}
         off = 0
+        hash32: Optional[int] = None
 
         def add(nm: str, b: bytes):
             nonlocal off
@@ -816,7 +924,8 @@ class CheckNRunManager:
             rows_arr = (tab[int(idx[0]):int(idx[-1]) + 1] if full
                         else tab[idx])
             t0 = time.monotonic()
-            scale, zero, codes_payload = self._quant_encode(rows_arr, qcfg)
+            scale, zero, codes_payload, hash32 = self._quant_encode(rows_arr,
+                                                                    qcfg)
             if clock is not None:
                 clock.add(time.monotonic() - t0)
             # fp16 quantization metadata (beyond-paper: the paper flags its
@@ -826,29 +935,111 @@ class CheckNRunManager:
             add("zero", np.asarray(zero, dtype=META_DTYPE).tobytes())
             add("codes", codes_payload)
         else:
-            add("values", np.ascontiguousarray(tab[idx], dtype=np.float32).tobytes())
+            values = np.ascontiguousarray(tab[idx], dtype=np.float32).tobytes()
+            hash32 = self._payload_hash32(values)
+            add("values", values)
         for a_name, a_arr in aux.items():
             vals = a_arr[idx]
             if (self.config.aux_bits == 8 and vals.ndim == 1
                     and vals.dtype == np.float32 and len(idx)):
                 # per-chunk 8-bit asymmetric: [f32 lo][f32 hi][u8 codes]
                 lo, hi = float(vals.min()), float(vals.max())
+                # float64 throughout: a float32 `(hi - lo) / 255` underflows
+                # for subnormal spans (inf/nan codes); float64 keeps the
+                # nearest-code rounding exact for every representable span
                 scale8 = (hi - lo) / 255.0 or 1.0
-                codes8 = np.clip(np.round((vals - lo) / scale8), 0, 255).astype(np.uint8)
+                codes8 = np.clip(np.round((vals.astype(np.float64) - lo)
+                                          / scale8), 0, 255).astype(np.uint8)
                 add(f"aux8:{a_name}", np.array([lo, hi], np.float32).tobytes()
                     + codes8.tobytes())
             else:
                 add(f"aux:{a_name}", np.ascontiguousarray(vals).tobytes())
-        return b"".join(parts), sections
+        return b"".join(parts), sections, hash32
 
     # --------------------------------------------------------------- restore
-    def restore(self, step: Optional[int] = None) -> RestoredState:
+    def restore(self, step: Optional[int] = None,
+                on_corruption: str = "raise") -> RestoredState:
+        """Restore the model state at ``step`` (default: newest committed).
+
+        ``on_corruption`` controls what happens when a blob in the chain
+        fails integrity verification (:class:`ChunkCorruptionError`):
+
+        * ``"raise"`` (default) — propagate the typed error; the caller
+          decides (paper semantics: restore what was asked or fail).
+        * ``"fallback"`` — replan onto the newest committed chain that
+          does NOT pass through any step observed corrupt so far, retrying
+          until one restores or candidates run out (then the ORIGINAL
+          error propagates). A degraded restore sets
+          ``RestoredState.degraded_from`` to the step originally asked
+          for — training silently resuming from older state must at least
+          be loud in the result.
+        """
+        if on_corruption not in ("raise", "fallback"):
+            raise ValueError(f"on_corruption must be 'raise' or 'fallback', "
+                             f"got {on_corruption!r}")
         store = self.store
         if step is None:
             step = mf.latest_step(store)
         if step is None:
             raise FileNotFoundError("no valid checkpoint found")
-        chain = mf.recovery_chain(store, step)
+        try:
+            return self._restore_at(step)
+        except ChunkCorruptionError as e:
+            self._count(corruption_errors_total=1)
+            if on_corruption != "fallback":
+                raise
+            return self._restore_fallback(step, e)
+
+    def _restore_fallback(self, target: int,
+                          first_err: ChunkCorruptionError) -> RestoredState:
+        """Retry restore on progressively older committed chains, skipping
+        every chain that passes through a step already observed corrupt."""
+        store = self.store
+        bad = {first_err.step if first_err.step is not None else target}
+        tried = {target}
+        while True:
+            candidate = None
+            for s in sorted(mf.list_steps(store), reverse=True):
+                if s in tried or s in bad:
+                    continue
+                try:
+                    chain_steps = {m.step
+                                   for m in mf.recovery_chain(store, s)}
+                except (ValueError, KeyError, FileNotFoundError):
+                    tried.add(s)
+                    continue
+                if chain_steps & bad:
+                    tried.add(s)  # poisoned upstream — never retry it
+                    continue
+                candidate = s
+                break
+            if candidate is None:
+                raise first_err
+            tried.add(candidate)
+            try:
+                out = self._restore_at(candidate)
+            except ChunkCorruptionError as e:
+                self._count(corruption_errors_total=1)
+                bad.add(e.step if e.step is not None else candidate)
+                continue
+            out.degraded_from = target
+            self._count(restore_fallbacks_total=1)
+            return out
+
+    def _restore_at(self, step: int) -> RestoredState:
+        store = self.store
+        try:
+            chain = mf.recovery_chain(store, step)
+        except (KeyError, FileNotFoundError) as e:
+            # a chain manifest is gone (quarantined or reclaimed) — typed,
+            # so on_corruption="fallback" can replan around it
+            raise ChunkCorruptionError(
+                step, None, mf.manifest_key(step), "broken-chain",
+                f"recovery chain unreadable: {e}") from e
+        except ValueError as e:
+            raise ChunkCorruptionError(
+                step, None, mf.manifest_key(step), "broken-chain",
+                str(e)) from e
 
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
@@ -869,6 +1060,10 @@ class CheckNRunManager:
         with self._lock:
             self._cum_touched = {}
             self._uncommitted = {}
+        self._count(restores_total=1,
+                    restore_bytes_total=int(stats.get("payload_bytes", 0)),
+                    last_restore_step=final.step,
+                    restore_occupancy=dict(stats.get("occupancy", {})))
         return RestoredState(step=final.step, tables=tables, row_state=row_state,
                              dense=dense, extra=final.extra,
                              chain_len=len(chain), stats=stats)
@@ -966,13 +1161,15 @@ class CheckNRunManager:
                             continue
                         pipe.submit(
                             functools.partial(self.store.get, ch.key),
-                            functools.partial(self._decode_chunk, rec, ch),
+                            functools.partial(self._decode_chunk, man.step,
+                                              name, rec, ch),
                             functools.partial(self._apply_decoded, out,
                                               aux_out, rec, ch, off))
             for key_name, drec in final_man.dense.items():
                 pipe.submit(
                     functools.partial(self.store.get, drec.key),
-                    functools.partial(self._decode_dense, drec),
+                    functools.partial(self._decode_dense, final_man.step,
+                                      key_name, drec),
                     functools.partial(dense.__setitem__, key_name))
             pipe.drain()
         finally:
@@ -986,13 +1183,17 @@ class CheckNRunManager:
                                for k, v in pipe.occupancy().items()})
 
     # ---------------------------------------------------------- decode stage
-    def _decode_chunk(self, rec: mf.TableRecord, ch: mf.ChunkRecord,
+    def _decode_chunk(self, step: Optional[int], table: Optional[str],
+                      rec: mf.TableRecord, ch: mf.ChunkRecord,
                       data: bytes):
-        """Checksum + unpack + dequantize one chunk (decode workers, CPU).
-        Returns (global row idx, row values, {aux: (vals, width, dtype)})."""
+        """Verify + unpack + dequantize one chunk (decode workers, CPU).
+        Returns (global row idx, row values, {aux: (vals, width, dtype)}).
+        Integrity failures raise :class:`ChunkCorruptionError` carrying
+        step/table/key — ``restore(on_corruption="fallback")`` replans on
+        it, and operators see WHICH step to ``ckpt quarantine`` instead of
+        a bare checksum message."""
         dim = rec.dim
-        if ObjectStore.checksum(data) != ch.crc32:
-            raise IOError(f"checksum mismatch for {ch.key}")
+        verify_chunk_bytes(ch, data, step, table)
         if "indices" in ch.sections:
             o, n = ch.sections["indices"]
             idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
@@ -1023,8 +1224,14 @@ class CheckNRunManager:
                 o, n = sec8
                 lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
                 codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
-                a_vals = (codes.astype(np.float32) * ((hi - lo) / 255.0 or 1.0)
-                          + lo)
+                # float64 scale arithmetic on Python floats, matching the
+                # ENCODER exactly: float32 `(hi - lo) / 255.0` underflows
+                # for near-zero ranges, distorting the dequant scale (and
+                # a zero scale would collapse every row to `lo`)
+                lo, hi = float(lo), float(hi)
+                scale8 = (hi - lo) / 255.0 or 1.0
+                a_vals = (codes.astype(np.float64) * scale8 + lo).astype(
+                    np.float32)
             elif sec is None:
                 continue
             else:
@@ -1055,8 +1262,12 @@ class CheckNRunManager:
             else:
                 aux_out[a_name][idx] = a_vals.reshape(-1, width)
 
-    def _decode_dense(self, rec: mf.DenseRecord, data: bytes) -> np.ndarray:
-        if ObjectStore.checksum(data) != rec.crc32:
-            raise IOError(f"checksum mismatch for {rec.key}")
+    def _decode_dense(self, step: Optional[int], name: Optional[str],
+                      rec: mf.DenseRecord, data: bytes) -> np.ndarray:
+        got = ObjectStore.checksum(data)
+        if got != rec.crc32:
+            raise ChunkCorruptionError(
+                step, name, rec.key, "crc32-mismatch",
+                f"got {got:#010x}, manifest records {rec.crc32:#010x}")
         return np.frombuffer(
             data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()

@@ -29,6 +29,11 @@ MANIFEST_PREFIX = "manifests/"
 PART_PREFIX = "parts/"
 CHUNK_PREFIX = "chunks/"
 
+# Backstop for recovery-chain walks over damaged manifests: no sane policy
+# produces chains anywhere near this deep (consecutive policies re-baseline
+# far sooner), so hitting it means the prev/base links are garbage.
+_MAX_CHAIN_LEN = 100_000
+
 
 def manifest_key(step: int) -> str:
     return f"{MANIFEST_PREFIX}ckpt_{step:012d}.json"
@@ -68,6 +73,12 @@ class ChunkRecord:
     crc32: int
     sections: Dict[str, List[int]]  # name -> [offset, nbytes]
     row_range: Optional[List[int]] = None  # [lo, hi) for full-ckpt range chunks
+    # 32-bit content hash of the chunk's primary section (packed codes, or
+    # raw values when unquantized), computed ON DEVICE alongside quant_pack
+    # (kernels/chunk_hash) — an integrity witness that predates the
+    # host-side crc32's coverage. Old manifests omit it; verifiers treat
+    # None as "no hash recorded", never as a failure.
+    hash32: Optional[int] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -308,10 +319,29 @@ def recovery_chain(store: ObjectStore, step: int) -> List[Manifest]:
         return [m]
     chain = [m]
     cursor = m
+    # A corrupt or hand-edited manifest can point its prev/base link at
+    # itself, forward, or around a cycle — without these guards the walk
+    # never terminates (or "recovers" a step from data written after it).
+    # Steps are monotone, so every legal link points strictly backward.
+    seen = {m.step}
     while cursor.kind != "full":
         prev = cursor.prev_step if cursor.policy.get("name") == "consecutive" else cursor.base_step
         if prev is None:
             raise ValueError(f"broken recovery chain at step {cursor.step}")
+        if prev >= cursor.step:
+            raise ValueError(
+                f"corrupt recovery chain: step {cursor.step} points "
+                f"{'at itself' if prev == cursor.step else 'forward'} "
+                f"(prev/base {prev})")
+        if prev in seen:
+            raise ValueError(
+                f"corrupt recovery chain: cycle through step {prev} "
+                f"(visited {sorted(seen)})")
+        seen.add(prev)
+        if len(seen) > _MAX_CHAIN_LEN:
+            raise ValueError(
+                f"recovery chain for step {step} exceeds {_MAX_CHAIN_LEN} "
+                f"links without reaching a full checkpoint")
         cursor = load(store, prev)
         chain.append(cursor)
     chain.reverse()
@@ -450,8 +480,10 @@ def _delete_step_batch(store: ObjectStore, s: int,
     chunk blob is touched. A committer that was already past its own
     collect when the sweep started usually lands inside one of those two
     checks — its manifest then keeps every chunk (restore never reads the
-    parts; only ``ckpt verify``'s part-crc audit notes the reclaimed
-    votes). The guards NARROW rather than close the race: a commit put
+    parts; ``ckpt verify`` / ``integrity.scan_step`` classify the missing
+    votes as benign ``reclaimed-part`` when the payload is intact, and
+    only exit non-zero for parts missing alongside payload damage). The
+    guards NARROW rather than close the race: a commit put
     landing after the second check, mid-chunk-deletion, still tears the
     step. Closing it needs store-side transactions; until then the
     operating rule stands — never run offline commits (``ckpt commit``)

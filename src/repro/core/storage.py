@@ -100,6 +100,16 @@ class ObjectStore:
     def total_bytes(self, prefix: str = "") -> int:
         return sum(self.size(k) for k in self.list(prefix))
 
+    def move(self, src: str, dst: str) -> None:
+        """Relocate one blob (``integrity.quarantine_step``'s workhorse).
+        Copy-then-delete, so a crash mid-move leaves the blob readable at
+        one key or both — never at neither. Backends with a native rename
+        may override; LocalFSStore keeps this default because its keys map
+        to paths across directories and the copy preserves the
+        written-blob durability guarantees of ``put``."""
+        self.put(dst, self.get(src))
+        self.delete(src)
+
     # ------------------------------------------------------- multi-key ops
     def put_many(self, items: Sequence[Tuple[str, bytes]],
                  max_workers: int = 4) -> None:

@@ -24,7 +24,12 @@ not bit-for-bit across different ``num_hosts``.
 
 Encoding (quantize → pack → checksum) is delegated to the ``encoder``
 collaborator (the :class:`~repro.core.checkpoint.CheckNRunManager`), so the
-byte format has exactly one implementation.
+byte format has exactly one implementation — which means sharded chunks
+also carry the per-chunk content ``hash32`` (computed on device alongside
+the fused pack; see ``repro.kernels.chunk_hash`` and ``docs/integrity.md``)
+and are covered by ``ckpt scan`` exactly like single-host chunks. The
+part manifests written here are what ``ckpt scan`` classifies as benign
+``reclaimed-part`` debris after retention deletes a step's payload.
 """
 
 from __future__ import annotations

@@ -6,9 +6,10 @@ Validated in interpret mode on CPU; `impl="pallas"` targets real TPUs.
 """
 
 from .adaptive_quant import adaptive_quant
+from .chunk_hash import chunk_hash32, chunk_hash32_device
 from .dot_interaction import dot_interaction
 from .embedding_bag import embedding_bag
 from .flash_attention import flash_attention
 
-__all__ = ["adaptive_quant", "dot_interaction", "embedding_bag",
-           "flash_attention"]
+__all__ = ["adaptive_quant", "chunk_hash32", "chunk_hash32_device",
+           "dot_interaction", "embedding_bag", "flash_attention"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: 32-bit content hash of a packed chunk word stream.
+
+Runs alongside ``quant_pack`` on the write path so the hash is computed
+over the SAME device words the host serializes — an end-to-end integrity
+witness from the accelerator's VMEM to the object store (the host-side
+crc32 only covers the payload after it crossed PCIe/host memory).
+
+Mapping: the word stream is viewed as (rows, 128) uint32 lanes; the grid
+tiles rows into (BLOCK_ROWS, 128) VMEM blocks. Each block computes the
+masked partial sum of the per-word mixed terms (see ``ref.py`` — the terms
+are position-folded, so the order-sensitive hash still reduces through an
+associative sum and blocks are independent). Partials land in a
+(num_blocks, 1) output; the wrapper sums them and applies the final
+avalanche. One HBM read of the words, O(num_blocks) words written back —
+memory-bound at roofline.
+
+The valid word count rides in as a per-block (1, 1) operand rather than a
+static closure constant, so ragged chunk tails don't fan out into one
+compiled kernel per length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PRIME1, PRIME2, PRIME3, PRIME5
+
+LANES = 128
+
+
+def mix_terms(words: jax.Array, index: jax.Array) -> jax.Array:
+    """Per-word mixed terms, uint32 wraparound — must match
+    ``ref.mix_terms_np`` bit-for-bit (jnp uint32 arithmetic wraps, like
+    numpy's)."""
+    t = words + index * jnp.uint32(PRIME2)
+    t = t ^ (t >> jnp.uint32(15))
+    t = t * jnp.uint32(PRIME1)
+    t = t ^ (t >> jnp.uint32(13))
+    t = t * jnp.uint32(PRIME3)
+    return t
+
+
+def finalize(acc: jax.Array, count: jax.Array) -> jax.Array:
+    """Length fold + avalanche, uint32 — must match ``ref.finalize``."""
+    h = acc + count * jnp.uint32(PRIME5)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(PRIME1)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(PRIME3)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def chunk_hash_kernel(n_ref, w_ref, out_ref, *, block_rows: int):
+    """One grid block's masked partial sum of mixed terms.
+
+    n_ref (1, 1) uint32 — the valid word count (replicated per block)
+    w_ref (BLOCK_ROWS, 128) uint32 — this block's slice of the word stream
+    out_ref (1, 1) uint32 — the block's partial sum
+    """
+    b = pl.program_id(0)
+    w = w_ref[...]
+    row = jax.lax.broadcasted_iota(jnp.uint32, w.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, w.shape, 1)
+    base = (b * block_rows * LANES).astype(jnp.uint32)
+    idx = base + row * jnp.uint32(LANES) + col
+    t = mix_terms(w, idx)
+    t = jnp.where(idx < n_ref[0, 0], t, jnp.uint32(0))
+    out_ref[0, 0] = jnp.sum(t)
+
+
+def chunk_hash_pallas(words: jax.Array, count: jax.Array,
+                      block_rows: int = 8,
+                      interpret: bool = False) -> jax.Array:
+    """Hash a uint32 word stream on device via the Pallas kernel; returns
+    the uint32 hash scalar. ``words`` may be zero-padded past ``count`` —
+    padding words are masked out, so the result equals
+    ``ref.hash_words_np(words[:count])``."""
+    n = words.shape[0]
+    per_block = block_rows * LANES
+    n_pad = ((n + per_block - 1) // per_block) * per_block if n else per_block
+    if n_pad != n:
+        words = jnp.pad(words, (0, n_pad - n))
+    w2d = words.reshape(-1, LANES)
+    num_blocks = w2d.shape[0] // block_rows
+    count = jnp.asarray(count, jnp.uint32)
+    nvec = jnp.broadcast_to(count.reshape(1, 1), (num_blocks, 1))
+    kernel = functools.partial(chunk_hash_kernel, block_rows=block_rows)
+    partials = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 1), jnp.uint32),
+        interpret=interpret,
+    )(nvec, w2d)
+    return finalize(jnp.sum(partials, dtype=jnp.uint32), count)

@@ -3,6 +3,16 @@
   PYTHONPATH=src python -m repro.launch.ckpt list   --dir /ckpts/job-1
   PYTHONPATH=src python -m repro.launch.ckpt show   --dir /ckpts/job-1 --step 12000
   PYTHONPATH=src python -m repro.launch.ckpt verify --dir /ckpts/job-1   # fsck
+  PYTHONPATH=src python -m repro.launch.ckpt scan   --dir /ckpts/job-1 \
+      --quarantine            # full integrity audit; park corrupt steps
+  PYTHONPATH=src python -m repro.launch.ckpt validate --dir /ckpts/job-1 \
+      --step 12000            # deep-verify ONE step + its recovery chain
+  PYTHONPATH=src python -m repro.launch.ckpt quarantine --dir /ckpts/job-1 \
+      --step 12000 --reason "bit flips on rack 7"
+  PYTHONPATH=src python -m repro.launch.ckpt resume --dir /ckpts/job-1 \
+      --policy last-known-good   # where can training restart?
+  PYTHONPATH=src python -m repro.launch.ckpt emit-metrics --dir /ckpts/job-1 \
+      --textfile /var/lib/node_exporter/cnr.prom
   PYTHONPATH=src python -m repro.launch.ckpt gc     --dir /ckpts/job-1 --keep 2
   PYTHONPATH=src python -m repro.launch.ckpt gc-aborted --dir /ckpts/job-1
   PYTHONPATH=src python -m repro.launch.ckpt commit --dir /ckpts/job-1 \
@@ -10,13 +20,16 @@
 
 ``--dir`` accepts a LocalFSStore root path OR a remote store URI
 (``http://host:port`` of a ``repro.core.object_server``), so every
-operator recovery flow — inspecting a torn save, finishing phase 2 from
-durable votes, reclaiming aborted debris — works without a shared
-filesystem:
+operator recovery flow — inspecting a torn save, auditing and
+quarantining corruption, finishing phase 2 from durable votes, reclaiming
+aborted debris — works without a shared filesystem:
 
-  PYTHONPATH=src python -m repro.launch.ckpt verify --dir http://10.0.0.5:9000
+  PYTHONPATH=src python -m repro.launch.ckpt scan   --dir http://10.0.0.5:9000
   PYTHONPATH=src python -m repro.launch.ckpt commit --dir http://10.0.0.5:9000 \
       --step 12000 --num-hosts 4
+
+See docs/integrity.md for the scan → quarantine → resume → restore
+operator flow and the corrupt-store triage cookbook.
 """
 
 from __future__ import annotations
@@ -26,10 +39,52 @@ import sys
 import time
 
 
+def _print_scan(store, report, do_quarantine: bool = False) -> int:
+    """Render a ScanReport; optionally park corrupt steps under corrupt/.
+    Exit 0 iff no fatal corruption (benign reclaimed-part notes don't
+    fail the scan)."""
+    from ..core import integrity
+
+    if not report.steps:
+        print("no valid checkpoints")
+        return 0
+    for s in sorted(report.steps):
+        rep = report.steps[s]
+        for p in rep.problems:
+            tag = "note" if not p.fatal else "FAIL"
+            print(f"  [{tag}] {p.kind} {p.key}"
+                  + (f" ({p.detail})" if p.detail else ""))
+        mode = "verified" if report.deep else "present"
+        print(f"step {s}: {'OK' if rep.ok else 'CORRUPT'} "
+              f"({rep.chunks_checked} blobs {mode}, "
+              f"{rep.bytes_checked:,} bytes)")
+    for s in sorted(report.chain_problems):
+        p = report.chain_problems[s]
+        print(f"step {s}: UNRESTORABLE — {p.kind}: {p.detail}")
+    corrupt = report.corrupt_steps
+    if do_quarantine and corrupt:
+        for s in corrupt:
+            rep = report.steps[s]
+            reasons = ", ".join(sorted({p.kind for p in rep.fatal_problems}))
+            moved = integrity.quarantine_step(
+                store, s, f"ckpt scan --quarantine: {reasons}",
+                problems=rep.problems)
+            print(f"quarantined step {s}: {len(moved)} blobs moved under "
+                  f"{integrity.CORRUPT_PREFIX}ckpt_{s:012d}/")
+    if corrupt or report.chain_problems:
+        print(f"scan: {len(corrupt)} corrupt step(s), "
+              f"{len(report.chain_problems)} unrestorable chain(s)")
+        return 1
+    print(f"scan: all {len(report.steps)} step(s) clean")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("cmd", choices=["list", "show", "verify", "gc",
-                                    "gc-aborted", "commit"])
+    ap.add_argument("cmd", choices=["list", "show", "verify", "scan",
+                                    "validate", "quarantine", "resume",
+                                    "emit-metrics", "gc", "gc-aborted",
+                                    "commit"])
     ap.add_argument("--dir", required=True,
                     help="LocalFSStore root path or remote store URI "
                          "(http://host:port)")
@@ -41,12 +96,108 @@ def main(argv=None):
                     help="gc-aborted: also reclaim steps newer than the "
                          "latest committed manifest (UNSAFE unless no "
                          "writer is active — they may be in-flight saves)")
+    ap.add_argument("--quick", action="store_true",
+                    help="scan: structural audit only (existence + size; "
+                         "no payload downloads, no crc/hash checks)")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="scan: move every corrupt step under corrupt/ "
+                         "with a REASON.json")
+    ap.add_argument("--reason", default=None,
+                    help="quarantine: why the step is being parked")
+    ap.add_argument("--policy", default="last-known-good",
+                    choices=["latest-valid", "last-known-good"],
+                    help="resume: structural completeness vs full content "
+                         "verification of the whole recovery chain")
+    ap.add_argument("--textfile", default=None,
+                    help="emit-metrics: write Prometheus textfile here "
+                         "(atomic) instead of stdout")
     args = ap.parse_args(argv)
 
-    from ..core import ObjectStore, make_store
+    from ..core import integrity, make_store, metrics
     from ..core import manifest as mf
 
     store = make_store(args.dir)
+
+    if args.cmd == "scan":
+        report = integrity.scan_store(store, deep=not args.quick)
+        return _print_scan(store, report, do_quarantine=args.quarantine)
+
+    if args.cmd == "validate":
+        steps = mf.list_steps(store)
+        if not steps:
+            print("no valid checkpoints")
+            return 1
+        s = args.step if args.step is not None else steps[-1]
+        try:
+            chain = integrity.checked_chain(store, s)
+        except integrity.ChunkCorruptionError as e:
+            print(f"step {s}: BROKEN CHAIN — {e}")
+            return 1
+        report = integrity.scan_store(store, steps=[m.step for m in chain],
+                                      deep=True)
+        ok = True
+        for m in chain:
+            rep = report.steps[m.step]
+            for p in rep.problems:
+                tag = "note" if not p.fatal else "FAIL"
+                print(f"  [{tag}] step {p.step}: {p.kind} {p.key}"
+                      + (f" ({p.detail})" if p.detail else ""))
+            ok &= rep.ok
+            print(f"step {m.step}: "
+                  f"{'OK' if rep.ok else 'CORRUPT'} "
+                  f"({rep.chunks_checked} blobs, "
+                  f"{rep.bytes_checked:,} bytes verified)")
+        print(f"step {s} chain {[m.step for m in chain]}: "
+              f"{'VALID' if ok else 'CORRUPT'}")
+        return 0 if ok else 1
+
+    if args.cmd == "quarantine":
+        if args.step is None:
+            print("quarantine requires --step")
+            return 2
+        known = set(mf.list_steps(store)) | set(
+            mf.aborted_steps(store))
+        if args.step not in known:
+            print(f"step {args.step} has no manifest or blobs to quarantine")
+            return 1
+        rep = integrity.scan_step(store, args.step, deep=True)
+        moved = integrity.quarantine_step(
+            store, args.step,
+            args.reason or "operator quarantine via ckpt CLI",
+            problems=rep.problems)
+        print(f"quarantined step {args.step}: {len(moved)} blobs moved "
+              f"under {integrity.CORRUPT_PREFIX}ckpt_{args.step:012d}/")
+        return 0
+
+    if args.cmd == "resume":
+        plan = integrity.plan_resume(store, deep=True)
+        if plan.latest_step is None:
+            print("no valid checkpoints")
+            return 1
+        print(f"latest committed:  {plan.latest_step}")
+        print(f"latest valid:      {plan.latest_valid}")
+        print(f"last known good:   {plan.last_known_good}")
+        for s in plan.corrupt_steps:
+            print(f"  corrupt step {s}: {plan.reasons.get(s, '?')}")
+        chosen = (plan.latest_valid if args.policy == "latest-valid"
+                  else plan.last_known_good)
+        if chosen is None:
+            print(f"no {args.policy} step exists — restore from a replica "
+                  f"or accept data loss")
+            return 1
+        chain = [m.step for m in mf.recovery_chain(store, chosen)]
+        print(f"resume from step {chosen} (chain {chain})")
+        return 0
+
+    if args.cmd == "emit-metrics":
+        vals = metrics.store_metrics(store)
+        text = metrics.render_prometheus(vals)
+        if args.textfile:
+            metrics.write_textfile(text, args.textfile)
+            print(f"wrote {len(text)} bytes to {args.textfile}")
+        else:
+            sys.stdout.write(text)
+        return 0
 
     if args.cmd == "gc-aborted":
         # reclaim chunk/part debris of crashed or cancelled saves; steps
@@ -180,43 +331,28 @@ def main(argv=None):
         return 0
 
     if args.cmd == "verify":
+        # the original fsck, now over the shared integrity scanner: every
+        # blob downloaded once, crc32 + hash32 checked from the same bytes.
+        # A part manifest reclaimed by GC/retention under an intact payload
+        # prints as a labelled NOTE and does NOT fail the fsck — only
+        # genuinely missing data exits non-zero (manifest.py's
+        # _delete_step_batch commit-race leaves exactly this debris).
+        report = integrity.scan_store(store, deep=True)
         total_bad = 0
         for s in steps:
-            bad = 0
-            m = mf.load(store, s)
-            for p in (m.shards or {}).get("parts", ()):
-                # two-phase invariant: a committed sharded manifest implies
-                # every host's part manifest is durable and unmodified
-                try:
-                    raw = store.get(p["key"])
-                except (FileNotFoundError, KeyError):
-                    print(f"MISSING PART {p['key']}")
-                    bad += 1
-                    continue
-                if ObjectStore.checksum(raw) != p["crc32"]:
-                    print(f"CORRUPT PART {p['key']}")
-                    bad += 1
-            for name, rec in m.tables.items():
-                for ch in rec.chunks:
-                    try:
-                        data = store.get(ch.key)
-                    except (FileNotFoundError, KeyError):
-                        print(f"MISSING {ch.key}")
-                        bad += 1
-                        continue
-                    if ObjectStore.checksum(data) != ch.crc32:
-                        print(f"CORRUPT {ch.key}")
-                        bad += 1
-            for key_name, rec in m.dense.items():
-                try:
-                    data = store.get(rec.key)
-                except (FileNotFoundError, KeyError):
-                    print(f"MISSING {rec.key}")
-                    bad += 1
-                    continue
-                if ObjectStore.checksum(data) != rec.crc32:
-                    print(f"CORRUPT {rec.key}")
-                    bad += 1
+            rep = report.steps[s]
+            for p in rep.problems:
+                if p.kind == "reclaimed-part":
+                    print(f"NOTE retention-reclaimed part {p.key} "
+                          f"(payload intact)")
+                elif p.kind.startswith("missing"):
+                    print(f"MISSING {p.key}" if p.kind != "missing-part"
+                          else f"MISSING PART {p.key}")
+                elif p.kind == "part-crc-mismatch":
+                    print(f"CORRUPT PART {p.key}")
+                else:
+                    print(f"CORRUPT {p.key} ({p.kind})")
+            bad = len(rep.fatal_problems)
             print(f"step {s}: {'OK' if bad == 0 else f'{bad} problems'}")
             total_bad += bad
         return 1 if total_bad else 0

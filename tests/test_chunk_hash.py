@@ -1,0 +1,183 @@
+"""On-device chunk content hash (kernels/chunk_hash) vs the host oracle.
+
+The contract under test: for every bitwidth × quant method the write path
+supports, hashing the device-side packed word stream equals hashing the
+serialized payload bytes with the numpy oracle — the equivalence that lets
+``quant_pack`` hash on device while ``ckpt scan`` re-derives the hash from
+stored bytes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.kernels.chunk_hash import chunk_hash32, chunk_hash32_device
+from repro.kernels.chunk_hash.kernel import chunk_hash_pallas
+from repro.kernels.chunk_hash.ops import _impl_for
+from repro.kernels.chunk_hash.ref import hash_words_np
+
+
+def _words(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2**32, size=n, dtype=np.uint32)
+
+
+# ------------------------------------------------------------------ oracle
+
+def test_oracle_padding_and_order_sensitivity():
+    payload = b"\x01\x02\x03\x04\x05"
+    # zero-padding to a whole word is part of the DEFINITION
+    assert chunk_hash32(payload) == chunk_hash32(payload)  # deterministic
+    assert chunk_hash32(payload) == hash_words_np(
+        np.frombuffer(payload + b"\x00" * 3, dtype="<u4"))
+    # order-sensitive: swapping two words changes the hash
+    w = _words(64, seed=1)
+    swapped = w.copy()
+    swapped[[3, 40]] = swapped[[40, 3]]
+    assert hash_words_np(w) != hash_words_np(swapped)
+    # length-sensitive: a trailing zero word is NOT a no-op
+    assert hash_words_np(w) != hash_words_np(np.append(w, np.uint32(0)))
+
+
+def test_oracle_empty_payload():
+    assert chunk_hash32(b"") == hash_words_np(np.zeros(0, np.uint32))
+
+
+def test_block_partials_compose():
+    # the index-folded terms sum associatively: any blocking reproduces
+    # the oracle (the property the Pallas grid relies on)
+    from repro.kernels.chunk_hash.ref import finalize, mix_terms_np
+    w = _words(1000, seed=2)
+    acc = 0
+    for lo in range(0, 1000, 192):
+        blk = w[lo:lo + 192]
+        acc = (acc + int(np.sum(mix_terms_np(blk, start_index=lo),
+                                dtype=np.uint64))) & 0xFFFFFFFF
+    assert finalize(acc, w.size) == hash_words_np(w)
+
+
+# ----------------------------------------------------------- device impls
+
+@pytest.mark.parametrize("n", [0, 1, 5, 1023, 1024, 1025, 4096, 10_000])
+def test_jnp_impl_matches_oracle(n):
+    w = _words(n, seed=n)
+    assert chunk_hash32_device(w, impl="jnp") == hash_words_np(w)
+
+
+@pytest.mark.parametrize("n", [1, 1024, 2048 + 17])
+def test_pallas_interpret_matches_oracle(n):
+    w = _words(n, seed=100 + n)
+    got = int(chunk_hash_pallas(np.asarray(w), n, interpret=True))
+    assert got == hash_words_np(w)
+
+
+def test_device_count_masks_padding():
+    # padded words beyond `count` must not leak into the hash
+    w = _words(600, seed=7)
+    padded = np.concatenate([w, np.full(424, 0xDEADBEEF, np.uint32)])
+    assert chunk_hash32_device(padded, count=600, impl="jnp") \
+        == hash_words_np(w)
+
+
+def test_impl_for_maps_quant_impl():
+    assert _impl_for("ref") == "ref"
+    assert _impl_for("interpret") == "interpret"
+    assert _impl_for("jnp") == "jnp"
+    assert _impl_for("unknown-future-impl") == "auto"
+
+
+# ----------------------------------- payload equivalence across bit widths
+
+@pytest.mark.parametrize("bits", list(range(1, 9)))
+@pytest.mark.parametrize("method", ["adaptive", "uniform_asym"])
+def test_device_hash_equals_payload_oracle(bits, method):
+    """bits 1-8 × both quant methods: hash of the device word stream ==
+    oracle hash of the serialized payload bytes (the manifest contract)."""
+    from repro.kernels.adaptive_quant import quant_pack
+
+    rng = np.random.default_rng(bits * 31 + (method == "adaptive"))
+    x = rng.normal(size=(37, 24)).astype(np.float32)  # ragged, non-lane
+    pq = quant_pack(x, bits=bits, method=method, impl="jnp")
+    payload = packing.words_to_payload(np.asarray(pq.words), pq.count, bits)
+    n_words = (len(payload) + 3) // 4
+    got = chunk_hash32_device(pq.words, count=n_words, impl="jnp")
+    assert got == chunk_hash32(payload)
+
+
+@pytest.mark.parametrize("bits", [1, 4, 7])
+def test_device_hash_equals_payload_oracle_interpret(bits):
+    """Same equivalence through the actual Pallas kernel (interpret mode
+    on CPU — the TPU codepath minus the hardware)."""
+    from repro.kernels.adaptive_quant import quant_pack
+
+    rng = np.random.default_rng(bits)
+    x = rng.normal(size=(53, 16)).astype(np.float32)
+    pq = quant_pack(x, bits=bits, method="adaptive", impl="jnp")
+    payload = packing.words_to_payload(np.asarray(pq.words), pq.count, bits)
+    n_words = (len(payload) + 3) // 4
+    got = chunk_hash32_device(pq.words, count=n_words, impl="interpret")
+    assert got == chunk_hash32(payload)
+
+
+# ------------------------------------------------- manifest-level recording
+
+def test_manager_records_and_verifies_hash32(tiny_snapshot):
+    """End to end: saved chunks carry hash32; every recorded hash matches
+    an independent oracle recomputation from the stored bytes; the config
+    knob turns recording off."""
+    from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore
+    from repro.core import manifest as mf
+    from repro.core.integrity import primary_section
+
+    store = InMemoryStore()
+    cfg = CheckpointConfig(policy="full_only", async_write=False,
+                           chunk_rows=64)
+    mgr = CheckNRunManager(store, cfg)
+    mgr.save(tiny_snapshot(step=1), block=True).result()
+    man = mf.load(store, 1)
+    checked = 0
+    for trec in man.tables.values():
+        for ch in trec.chunks:
+            assert ch.hash32 is not None
+            data = store.get(ch.key)
+            o, n = ch.sections[primary_section(ch)]
+            assert chunk_hash32(data[o:o + n]) == ch.hash32
+            checked += 1
+    assert checked > 0
+    mgr.close()
+
+    store2 = InMemoryStore()
+    cfg2 = CheckpointConfig(policy="full_only", async_write=False,
+                            chunk_rows=64, chunk_hash=False)
+    mgr2 = CheckNRunManager(store2, cfg2)
+    mgr2.save(tiny_snapshot(step=1), block=True).result()
+    man2 = mf.load(store2, 1)
+    assert all(ch.hash32 is None for trec in man2.tables.values()
+               for ch in trec.chunks)
+    # and restore still round-trips without hashes
+    rs = mgr2.restore()
+    assert rs.step == 1
+    mgr2.close()
+
+
+def test_fused_and_host_pack_hashes_agree(tiny_snapshot):
+    """fused_pack=True (device words hashed on device) and
+    fused_pack=False (host-packed payload hashed on host) must record the
+    SAME hash32 — byte-identical payloads imply identical hashes."""
+    from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore
+    from repro.core import manifest as mf
+
+    hashes = {}
+    for fused in (True, False):
+        store = InMemoryStore()
+        cfg = CheckpointConfig(policy="full_only", async_write=False,
+                               chunk_rows=64, fused_pack=fused)
+        mgr = CheckNRunManager(store, cfg)
+        mgr.save(tiny_snapshot(step=1), block=True).result()
+        man = mf.load(store, 1)
+        hashes[fused] = {ch.key: ch.hash32
+                         for trec in man.tables.values()
+                         for ch in trec.chunks}
+        mgr.close()
+    assert hashes[True] == hashes[False]
+    assert all(h is not None for h in hashes[True].values())

@@ -14,6 +14,7 @@ from repro.core import (
     CheckNRunManager,
     CheckpointConfig,
     CheckpointCancelled,
+    ChunkCorruptionError,
     InMemoryStore,
     RestorePipeline,
     Snapshot,
@@ -278,8 +279,14 @@ def test_streaming_restore_corrupt_chunk_raises():
     blob[7] ^= 0xFF
     store.put(key, bytes(blob))
     mgr = CheckNRunManager(store, cfg)
-    with pytest.raises(IOError, match="checksum mismatch"):
+    # ChunkCorruptionError subclasses IOError (legacy handlers keep
+    # working) and carries step/table/key context instead of a bare
+    # "checksum mismatch"
+    with pytest.raises(IOError, match="crc32-mismatch") as ei:
         mgr.restore()
+    err = ei.value
+    assert isinstance(err, ChunkCorruptionError)
+    assert err.step == 1 and err.key == key and err.kind == "crc32-mismatch"
     mgr.close()
 
 
