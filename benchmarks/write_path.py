@@ -5,7 +5,9 @@ read-throttled store, the sharded multi-host sweep (dist/shard_writer.py —
 1/2/4/8 simulated hosts on a shared aggregate link vs per-host links), the
 remote object-store section (core/remote_store.py — protocol overhead vs a
 ThrottledStore at the same modelled link, plus a seeded fault sweep that
-measures retry amplification as wire-bytes / logical-bytes), plus the
+measures retry amplification as wire-bytes / logical-bytes), the partial-
+vs-full host-loss recovery sweep (dist/recovery.py — shard replay vs
+whole-model restore at 2/4/8 hosts over the modelled read link), plus the
 bit-packing microbench. Writes ``BENCH_write_path.json``.
 
   PYTHONPATH=src python benchmarks/write_path.py [--tiny] [--restore-only]
@@ -729,6 +731,106 @@ def bench_restore(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_recovery(args, qcfg: QuantConfig) -> dict:
+    """Partial vs full recovery after a host loss (docs/partial_recovery.md),
+    over the same network-bound read model as the restore section.
+
+    For each host count N the same embedding-dominated snapshot is saved
+    sharded N ways, then recovered two ways from a read-throttled view of
+    the same blobs:
+
+      full:     the classical response — restore the WHOLE model
+      partial:  fence the victim and replay ONLY its shard chain via the
+                recovery supervisor (``restore_part``)
+
+    The headline is the bytes ratio: partial recovery must fetch ≈ the
+    victim's shard (1/N of the tables, plus dense + manifest overhead),
+    not the model — that is the ``partial_recovery_bytes_o_shard``
+    acceptance flag. Wall time follows bytes on a bandwidth-bound link.
+    Correctness: the partial result must equal the full restore's slice of
+    the victim's row ranges."""
+    from repro.dist import recovery as rcv
+
+    snap = make_workload(args.tables, args.rows, args.dim, seed=3,
+                         dense_dim=32)
+    victim = 1
+    sweep = []
+    for n in args.recovery_hosts:
+        store = InMemoryStore()
+        mgr = CheckNRunManager(store, CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows, num_hosts=n,
+            encode_workers=args.encode_workers,
+            write_workers=args.write_workers))
+        mgr.save(snap).result()
+        mgr.close()
+
+        def throttled():
+            return ThrottledStore(
+                store, write_bytes_per_sec=1e12,
+                read_bytes_per_sec=args.read_mbps * 1e6,
+                read_latency_s=args.read_latency_ms / 1e3)
+
+        # full restore (the classical recovery everyone pays today)
+        view = throttled()
+        fmgr = CheckNRunManager(view, CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows,
+            restore_workers=args.restore_workers,
+            decode_workers=args.decode_workers))
+        b0 = view.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+        full = fmgr.restore(1)
+        full_wall = time.monotonic() - t0
+        full_bytes = view.counters.snapshot()["bytes_read"] - b0
+        fmgr.close()
+
+        # partial: supervisor fences the victim, replays one shard chain
+        view = throttled()
+        pmgr = CheckNRunManager(view, CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows,
+            restore_workers=args.restore_workers,
+            decode_workers=args.decode_workers))
+        sup = rcv.RecoverySupervisor(view, n)
+        b0 = view.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+        rs = sup.recover(pmgr, victim, step=1)
+        part_wall = time.monotonic() - t0
+        part_bytes = view.counters.snapshot()["bytes_read"] - b0
+        pmgr.close()
+        if rs.extra["recovery"]["kind"] != "partial":
+            raise AssertionError(
+                f"recovery degraded to full at {n} hosts: "
+                f"{rs.extra.get('recovery_fallback_reason')}")
+        for name in snap.tables:
+            lo, hi = rs.extra["shard"]["row_range"][name]
+            if not np.array_equal(rs.tables[name], full.tables[name][lo:hi]):
+                raise AssertionError(
+                    f"partial recovery mismatch: {name} ({n} hosts)")
+        shard_bytes = rcv.shard_nbytes(store, victim, 1)
+        sweep.append({
+            "num_hosts": n,
+            "full": {"wall_s": round(full_wall, 4), "bytes": full_bytes},
+            "partial": {"wall_s": round(part_wall, 4), "bytes": part_bytes,
+                        "shard_payload_bytes": shard_bytes},
+            "bytes_ratio": round(part_bytes / full_bytes, 3),
+            "wall_speedup": round(full_wall / part_wall, 2),
+            # O(shard): the fetch may exceed the pure shard payload only
+            # by metadata (global manifest + part JSON) and dense params
+            "bytes_o_shard": part_bytes / full_bytes <= 1.0 / n + 0.15,
+        })
+    return {
+        "config": {"tables": args.tables, "rows": args.rows, "dim": args.dim,
+                   "bits": qcfg.bits, "method": qcfg.method,
+                   "read_mbps": args.read_mbps,
+                   "read_latency_ms": args.read_latency_ms,
+                   "victim_host": victim},
+        "sweep": sweep,
+        "partial_matches_full_slice": True,
+    }
+
+
 def bench_packing(n_codes: int, extra_bits: int = 4) -> dict:
     rng = np.random.default_rng(0)
     out = {}
@@ -781,6 +883,9 @@ def main(argv=None):
                          "sharded sweep (empty string skips it)")
     ap.add_argument("--shard-target-s", type=float, default=1.2,
                     help="modelled 1-host transmission time for the sweep")
+    ap.add_argument("--recovery-hosts", default="2,4,8",
+                    help="comma-separated host counts for the partial-vs-"
+                         "full recovery sweep (empty string skips it)")
     # ---- remote store section ----
     ap.add_argument("--remote-error-rates", default="0.05,0.2",
                     help="seeded fault-injection error rates for the remote "
@@ -827,6 +932,8 @@ def main(argv=None):
         args.read_mbps, args.read_latency_ms = 20.0, 5.0
         args.restore_repeats = 1
     args.num_hosts = [int(n) for n in str(args.num_hosts).split(",") if n]
+    args.recovery_hosts = [int(n) for n in
+                           str(args.recovery_hosts).split(",") if n]
     args.mp_hosts = [int(n) for n in str(args.mp_hosts).split(",") if n]
     args.remote_error_rates = [float(r) for r in
                                str(args.remote_error_rates).split(",") if r]
@@ -916,6 +1023,13 @@ def main(argv=None):
         multiproc = bench_multiprocess(args, qcfg)
         print(json.dumps(multiproc, indent=1))
 
+    recov = None
+    if args.recovery_hosts:
+        print(f"== partial vs full recovery {args.recovery_hosts} "
+              f"(host loss, {args.read_mbps} MB/s reads) ==")
+        recov = bench_recovery(args, qcfg)
+        print(json.dumps(recov, indent=1))
+
     print(f"== packing microbench ({args.pack_codes} codes) ==")
     pack = bench_packing(args.pack_codes, extra_bits=args.bits)
     print(json.dumps(pack, indent=1))
@@ -929,6 +1043,7 @@ def main(argv=None):
         "sharded": sharded,
         "remote": remote,
         "multiprocess": multiproc,
+        "recovery": recov,
         "packing": pack,
         "acceptance": {
             "e2e_speedup_ge_3x": e2e["speedup_e2e"] >= 3.0,
@@ -957,6 +1072,13 @@ def main(argv=None):
                 all(r["write_amplification"] <= 3.0
                     for r in remote["fault_sweep"])
                 if remote else None),
+            # a host-loss recovery fetches ≈ the victim's shard (1/N of
+            # the tables + metadata/dense overhead), not the model
+            "partial_recovery_bytes_o_shard": (
+                all(r["bytes_o_shard"] for r in recov["sweep"])
+                if recov else None),
+            "partial_recovery_matches_full_slice": (
+                recov["partial_matches_full_slice"] if recov else None),
         },
     }
     with open(args.out, "w") as f:

@@ -1,7 +1,13 @@
 """Check-N-Run core: incremental + quantized checkpointing for training at scale."""
 
 from .bitwidth import BitwidthController, expected_failures, select_bits
-from .checkpoint import CheckNRunManager, CheckpointConfig, RestoredState, SaveResult
+from .checkpoint import (
+    CheckNRunManager,
+    CheckpointConfig,
+    PartialRecoveryError,
+    RestoredState,
+    SaveResult,
+)
 from .coordinator import (
     CommitContext,
     CommitCoordinator,

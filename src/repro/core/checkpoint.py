@@ -112,6 +112,15 @@ class CheckpointConfig:
     remote_fault: Optional[str] = None     # test-only: seeded FaultSpec
                                            # ("k=v,k=v") injected under each
                                            # host process's remote transport
+    proc_fault: Optional[str] = None       # test-only: "host:point" SIGKILLs
+                                           # that host process at a protocol
+                                           # point (host_proc --fault) during
+                                           # multiprocess saves
+    heartbeat_s: Optional[float] = None    # host processes publish liveness
+                                           # keys (heartbeats/host_<h>.json)
+                                           # at this period; the recovery
+                                           # supervisor reads them
+                                           # (docs/partial_recovery.md)
     commit_poll_s: float = 0.02            # phase-2 vote-poll interval
     commit_timeout_s: float = 120.0        # give up on a quorum that never
                                            # forms (a peer died pre-vote)
@@ -148,6 +157,38 @@ class RestoredState:
     # caller ASKED for (corrupt); ``step`` is the older chain actually
     # restored — callers must treat the gap as lost training to redo
     degraded_from: Optional[int] = None
+
+
+class PartialRecoveryError(ValueError):
+    """A shard-only recovery (:meth:`CheckNRunManager.restore_part`) cannot
+    proceed for this host/step — the shard chain is structurally or
+    physically unrecoverable on its own. Callers (the recovery supervisor,
+    ``ckpt recover``) catch this and FALL BACK to a full :meth:`restore`.
+
+    ``kind`` taxonomy:
+
+    * ``not-sharded`` — the checkpoint has no shard layout at all
+    * ``bad-host`` — host index outside the recorded ``num_hosts``
+    * ``layout-mismatch`` — a chain step was written with a different
+      ``num_hosts`` (the shard's row ranges differ step to step)
+    * ``broken-chain`` — a chain manifest is unreadable/quarantined
+    * ``missing-part`` — a chain step's part manifest is gone AND its
+      chunk payload cannot be reconstructed from the global manifest
+      (a benign retention-reclaimed part does NOT raise — see
+      :meth:`CheckNRunManager.restore_part`)
+    * ``corrupt-chunk`` — a shard chunk failed integrity verification
+      or its blob is gone
+    """
+
+    def __init__(self, host: int, step: Optional[int], kind: str,
+                 detail: str = "") -> None:
+        self.host = host
+        self.step = step
+        self.kind = kind
+        self.detail = detail
+        super().__init__(
+            f"partial recovery of host {host} at step {step} "
+            f"unavailable ({kind}): {detail}")
 
 
 class _QuantClock:
@@ -739,9 +780,24 @@ class CheckNRunManager:
                                   cfg.num_hosts, ctx,
                                   cfg.verify_shard_chunks)
             env = host_proc.child_env()
+            fault_host, fault_point = -1, None
+            if cfg.proc_fault:
+                fh, fault_point = cfg.proc_fault.split(":", 1)
+                fault_host = int(fh)
+            fence_epochs = [0] * cfg.num_hosts
+            if cfg.heartbeat_s is not None:
+                # replacement processes after a recovery must beat at the
+                # CURRENT fence epoch — at the old epoch the heartbeat
+                # writer would see itself fenced and exit(4) immediately
+                from ..dist.recovery import read_fence
+                fence_epochs = [read_fence(self.store, h)
+                                for h in range(cfg.num_hosts)]
             for h in range(cfg.num_hosts):
                 cmd = host_proc.host_command(
                     store_arg, spill, h,
+                    fault=fault_point if h == fault_host else None,
+                    heartbeat_s=cfg.heartbeat_s,
+                    heartbeat_epoch=fence_epochs[h],
                     net_fault=cfg.remote_fault,
                     batch_fsync=cfg.batch_fsync,
                     poll_interval_s=cfg.commit_poll_s,
@@ -1073,11 +1129,24 @@ class CheckNRunManager:
         only that host's part manifests and chunk blobs are fetched (plus
         the final step's dense params, which are global). Table arrays in
         the result cover just the host's row range; ``extra["shard"]``
-        records the ranges. Requires every manifest in the recovery chain to
-        be sharded with the same ``num_hosts``.
+        records the ranges (everything the train-side splice —
+        ``repro.train.state.splice_shard_state`` — needs to overwrite the
+        shard's rows of a live TrainState). Requires every manifest in the
+        recovery chain to be sharded with the same ``num_hosts``.
+
+        Structurally or physically unrecoverable shards raise
+        :class:`PartialRecoveryError` (typed, with a ``kind``); callers
+        fall back to a full :meth:`restore`. A chain step whose part
+        manifest was retention/GC-reclaimed but whose payload is intact
+        (the benign ``reclaimed-part`` classification in
+        ``core/integrity.py``) does NOT abort the replay: the host's chunk
+        records are reconstructed from the global manifest, whose merged
+        chunk keys retain the ``host_<h>/`` namespace.
 
         A reader-side operation: does NOT resync the manager's policy or
-        touched-row bookkeeping (use :meth:`restore` to resume training)."""
+        touched-row bookkeeping (use :meth:`restore`, or the partial-
+        recovery splice path in ``repro.train.loop``, to resume
+        training)."""
         from ..dist.sharding import row_shard_bounds
 
         store = self.store
@@ -1085,23 +1154,34 @@ class CheckNRunManager:
             step = mf.latest_step(store)
         if step is None:
             raise FileNotFoundError("no valid checkpoint found")
-        chain = mf.recovery_chain(store, step)
+        t0 = time.monotonic()
+        try:
+            chain = mf.recovery_chain(store, step)
+        except (KeyError, FileNotFoundError, ValueError) as e:
+            raise PartialRecoveryError(
+                host, step, "broken-chain",
+                f"recovery chain unreadable: {e}") from e
         final = chain[-1]
         num_hosts = (final.shards or {}).get("num_hosts")
         if num_hosts is None:
-            raise ValueError(f"checkpoint {step} is not sharded; use restore()")
+            raise PartialRecoveryError(
+                host, step, "not-sharded",
+                f"checkpoint {step} is not sharded; use restore()")
         if not 0 <= host < num_hosts:
-            raise ValueError(f"host {host} out of range for {num_hosts} hosts")
+            raise PartialRecoveryError(
+                host, step, "bad-host",
+                f"host {host} out of range for {num_hosts} hosts")
         for man in chain:
             if (man.shards or {}).get("num_hosts") != num_hosts:
-                raise ValueError(
+                raise PartialRecoveryError(
+                    host, step, "layout-mismatch",
                     f"recovery chain step {man.step} has a different shard "
                     f"layout; use restore()")
 
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
         ranges: Dict[str, List[int]] = {}
-        parts = [mf.load_part(store, man.step, host) for man in chain]
+        records = [self._host_records(man, host) for man in chain]
 
         def alloc(name: str, rec: mf.TableRecord):
             # shard-sized scratch: a host's chunks only reference rows in
@@ -1112,15 +1192,91 @@ class CheckNRunManager:
             return np.zeros((hi - lo, rec.dim), np.float32), lo
 
         dense: Dict[str, np.ndarray] = {}
-        stats = self._replay_chain(
-            [(man, part.tables) for man, part in zip(chain, parts)],
-            final, tables, row_state, dense, alloc)
+        try:
+            stats = self._replay_chain(
+                list(zip(chain, records)), final, tables, row_state, dense,
+                alloc)
+        except ChunkCorruptionError as e:
+            self._count(corruption_errors_total=1)
+            raise PartialRecoveryError(
+                host, step, "corrupt-chunk", str(e)) from e
+        except (KeyError, FileNotFoundError) as e:
+            # a chunk blob the manifest references is gone (GC race,
+            # partial quarantine) — unrecoverable from this shard alone
+            raise PartialRecoveryError(
+                host, step, "corrupt-chunk",
+                f"shard chunk blob unreadable: {e}") from e
         extra = dict(final.extra)
         extra["shard"] = {"host": host, "num_hosts": num_hosts,
                           "row_range": ranges}
+        rows_replayed = sum(ch.n_rows for recs in records
+                            for rec in recs.values() for ch in rec.chunks)
+        self._count(recoveries_partial_total=1,
+                    restore_bytes_total=int(stats.get("payload_bytes", 0)),
+                    recovery_rows_replayed_total=int(rows_replayed),
+                    last_recovery_wall_s=time.monotonic() - t0,
+                    last_recovery_host=host)
         return RestoredState(step=final.step, tables=tables,
                              row_state=row_state, dense=dense, extra=extra,
                              chain_len=len(chain), stats=stats)
+
+    def _host_records(self, man: mf.Manifest,
+                      host: int) -> Dict[str, mf.TableRecord]:
+        """One chain step's table records for ``host`` — from its part
+        manifest, or (when the part was retention/GC-reclaimed under an
+        intact payload: ``_delete_step_batch`` votes-first debris, the
+        benign ``reclaimed-part`` scan classification) reconstructed by
+        filtering the global manifest's merged chunk records down to the
+        host's ``chunks/ckpt_<step>/host_<h>/`` namespace."""
+        try:
+            return mf.load_part(self.store, man.step, host).tables
+        except (KeyError, FileNotFoundError) as e:
+            prefix = mf.chunk_host_prefix(man.step, host)
+            out: Dict[str, mf.TableRecord] = {}
+            for name, rec in man.tables.items():
+                chunks = [ch for ch in rec.chunks
+                          if ch.key.startswith(prefix)]
+                out[name] = dataclasses.replace(rec, chunks=chunks)
+            if not any(r.chunks for r in out.values()) and man.tables:
+                # nothing in the global manifest names this host's
+                # namespace either — the shard data is truly gone
+                raise PartialRecoveryError(
+                    host, man.step, "missing-part",
+                    f"part manifest absent and no host chunks recorded "
+                    f"in the global manifest: {e}") from e
+            return out
+
+    def resync_from(self, step: int) -> None:
+        """Resync the manager's incremental-policy and touched-row
+        bookkeeping to a committed step WITHOUT fetching any payload —
+        the partial-recovery exact path rolls survivors back from
+        in-memory state and replays only the failed shard, so the
+        payload-free half of :meth:`restore`'s resync needs to be callable
+        on its own."""
+        final = mf.load(self.store, step)
+        self.policy.load_dict(final.policy)
+        if self.bitwidth is not None and final.extra.get("bitwidth"):
+            self.bitwidth.load_dict(final.extra["bitwidth"])
+            self.bitwidth.on_restore()
+        with self._lock:
+            self._cum_touched = {}
+            self._uncommitted = {}
+
+    def refence_shard(self, ranges: Dict[str, List[int]]) -> None:
+        """Re-fence the touched-row tracker for a recovered shard: the
+        shard's rows now hold the last COMMITTED checkpoint's values, so
+        any since-last-commit touched bits for them are stale claims —
+        clear them (rows outside the shard keep their bits). The
+        since-last-FULL mask is left alone: relative to an older full
+        baseline the restored rows may still differ, and an incremental
+        save that skipped them would lose data; re-storing an unchanged
+        row is merely redundant."""
+        with self._lock:
+            for name, rng in ranges.items():
+                lo, hi = rng
+                m = self._uncommitted.get(name)
+                if m is not None and hi <= len(m):
+                    m[lo:hi] = False
 
     # ------------------------------------------------- streaming chain replay
     def _replay_chain(self, chain_records, final_man: mf.Manifest,

@@ -51,6 +51,14 @@ class ManagerMetrics:
     restore_fallbacks_total: int = 0
     corruption_errors_total: int = 0
     last_restore_step: Optional[int] = None
+    # partial recovery (docs/partial_recovery.md): shard-only replays and
+    # their full-restore fallbacks, counted by kind so dashboards can tell
+    # an O(shard) recovery from an O(model) one
+    recoveries_partial_total: int = 0
+    recoveries_full_total: int = 0
+    recovery_rows_replayed_total: int = 0
+    last_recovery_wall_s: Optional[float] = None
+    last_recovery_host: Optional[int] = None
     # GC / retention
     retention_steps_deleted_total: int = 0
     gc_steps_reclaimed_total: int = 0
@@ -93,6 +101,13 @@ _HELP = {
         "Restores that replanned onto an older chain after corruption.",
     "corruption_errors_total":
         "Chunk integrity failures observed during decode.",
+    "recoveries_total":
+        "Host-loss recoveries by kind (partial shard replay vs full-restore "
+        "fallback).",
+    "recovery_rows_replayed_total":
+        "Embedding rows replayed by partial (shard-only) recoveries.",
+    "last_recovery_wall_s": "Wall seconds of the most recent recovery.",
+    "last_recovery_host": "Host index of the most recent recovery.",
     "retention_steps_deleted_total":
         "Committed steps deleted by the retention policy.",
     "gc_steps_reclaimed_total": "Aborted steps garbage-collected.",
@@ -148,14 +163,22 @@ def render_prometheus(values: dict, prefix: str = PROM_PREFIX) -> str:
              {"outcome": "cancelled"}, "counter")
         emit("saves_total", values.get("saves_failed"),
              {"outcome": "failed"}, "counter")
+    # host-loss recoveries by kind as one labelled counter family
+    if "recoveries_partial_total" in values:
+        emit("recoveries_total", values.get("recoveries_partial_total"),
+             {"kind": "partial"}, "counter")
+        emit("recoveries_total", values.get("recoveries_full_total"),
+             {"kind": "full"}, "counter")
     for name in ("save_bytes_total", "restores_total", "restore_bytes_total",
                  "restore_fallbacks_total", "corruption_errors_total",
+                 "recovery_rows_replayed_total",
                  "retention_steps_deleted_total", "gc_steps_reclaimed_total",
                  "gc_keys_reclaimed_total"):
         if name in values:
             emit(name, values[name], mtype="counter")
     for name in ("last_success_step", "last_success_age_s",
-                 "last_restore_step", "steps_committed", "steps_aborted",
+                 "last_restore_step", "last_recovery_wall_s",
+                 "last_recovery_host", "steps_committed", "steps_aborted",
                  "steps_quarantined", "latest_step", "latest_step_age_s",
                  "latest_step_nbytes"):
         if name in values:

@@ -191,7 +191,9 @@ def host_command(store: str, spill_dir: str, host: int, *,
                  deadline_unix: Optional[float] = None,
                  watch_parent: bool = False,
                  net_fault: Optional[str] = None,
-                 batch_fsync: bool = False) -> List[str]:
+                 batch_fsync: bool = False,
+                 heartbeat_s: Optional[float] = None,
+                 heartbeat_epoch: Optional[int] = None) -> List[str]:
     """``store`` is a LocalFSStore root path OR a remote store URI
     (``http://host:port``) — :func:`~repro.core.remote_store.make_store`
     resolves either spelling inside the child."""
@@ -199,6 +201,10 @@ def host_command(store: str, spill_dir: str, host: int, *,
            "--store", store, "--spill", spill_dir, "--host", str(host)]
     if watch_parent:
         cmd += ["--watch-parent", str(os.getpid())]
+    if heartbeat_s is not None:
+        cmd += ["--heartbeat", str(heartbeat_s)]
+    if heartbeat_epoch is not None:
+        cmd += ["--heartbeat-epoch", str(heartbeat_epoch)]
     if net_fault:
         cmd += ["--net-fault", net_fault]
     if batch_fsync:
@@ -317,6 +323,16 @@ def main(argv=None) -> int:
                     metavar="LAUNCHER_PID",
                     help="exit(4) when no longer a child of this pid "
                          "(orphan fencing: never outlive the manager)")
+    ap.add_argument("--heartbeat", type=float, default=None,
+                    metavar="SECONDS",
+                    help="publish a liveness key (heartbeats/host_<h>.json) "
+                         "in the store at this period; the recovery "
+                         "supervisor reads these to condemn hosts it "
+                         "cannot wait() on (docs/partial_recovery.md)")
+    ap.add_argument("--heartbeat-epoch", type=int, default=0,
+                    help="fence epoch this host's heartbeats carry — a "
+                         "respawned replacement beats at the post-fence "
+                         "epoch so the supervisor trusts it over a zombie")
     ap.add_argument("--fault", default=None,
                     help="test-only SIGKILL point: mid_chunks[:N] | "
                          "before_vote | after_vote | mid_merge")
@@ -356,6 +372,17 @@ def main(argv=None) -> int:
         if not isinstance(store, RemoteObjectStore):
             ap.error("--net-fault needs a remote store URI")
         wrap_faulty(store, FaultSpec.parse(args.net_fault))
+    heartbeat = None
+    if args.heartbeat is not None:
+        # beats go through the REAL store (not the kill-switch wrapper):
+        # liveness keys never match a fault point, and a SIGKILLed host's
+        # beats stop with the process — which is exactly the signal
+        from .recovery import HeartbeatWriter
+
+        heartbeat = HeartbeatWriter(store, args.host,
+                                    interval_s=args.heartbeat,
+                                    epoch=args.heartbeat_epoch,
+                                    step=step).start()
     if args.fault:
         store = _KillSwitchStore(store, args.fault, step, args.host)
 
@@ -413,6 +440,8 @@ def main(argv=None) -> int:
         print(f"host {args.host}: {outcome}", flush=True)
         return 0 if outcome in ("committed", "observed") else 3
     finally:
+        if heartbeat is not None:
+            heartbeat.stop()
         mgr.close()
 
 

@@ -17,6 +17,9 @@
   PYTHONPATH=src python -m repro.launch.ckpt gc-aborted --dir /ckpts/job-1
   PYTHONPATH=src python -m repro.launch.ckpt commit --dir /ckpts/job-1 \
       --step 12000 --num-hosts 4   # finish phase 2 from durable votes
+  PYTHONPATH=src python -m repro.launch.ckpt recover --dir /ckpts/job-1 \
+      --host 2 --fence   # replay ONE host's shard chain (O(shard) bytes);
+                         # falls back to a full restore if unrecoverable
 
 ``--dir`` accepts a LocalFSStore root path OR a remote store URI
 (``http://host:port`` of a ``repro.core.object_server``), so every
@@ -84,7 +87,7 @@ def main(argv=None):
     ap.add_argument("cmd", choices=["list", "show", "verify", "scan",
                                     "validate", "quarantine", "resume",
                                     "emit-metrics", "gc", "gc-aborted",
-                                    "commit"])
+                                    "commit", "recover"])
     ap.add_argument("--dir", required=True,
                     help="LocalFSStore root path or remote store URI "
                          "(http://host:port)")
@@ -92,6 +95,12 @@ def main(argv=None):
     ap.add_argument("--keep", type=int, default=1)
     ap.add_argument("--num-hosts", type=int, default=None,
                     help="commit: expected quorum size")
+    ap.add_argument("--host", type=int, default=None,
+                    help="recover: host index whose shard chain to replay")
+    ap.add_argument("--fence", action="store_true",
+                    help="recover: bump the host's fence epoch first so a "
+                         "zombie writer at the old epoch exits on its next "
+                         "heartbeat (docs/partial_recovery.md)")
     ap.add_argument("--all", action="store_true",
                     help="gc-aborted: also reclaim steps newer than the "
                          "latest committed manifest (UNSAFE unless no "
@@ -289,6 +298,61 @@ def main(argv=None):
               f"{args.num_hosts} durable parts")
         return 0
 
+    if args.cmd == "recover":
+        # operator drill / replacement-host warmup: replay ONE host's shard
+        # chain and report what a partial recovery would splice — O(shard)
+        # bytes fetched, not O(model). Degrades to a full restore when the
+        # shard is unrecoverable (typed PartialRecoveryError), so the
+        # command always ends with usable state or a hard failure.
+        if args.host is None:
+            print("recover requires --host")
+            return 2
+        from ..core import (CheckNRunManager, CheckpointConfig,
+                            PartialRecoveryError)
+        from ..dist import recovery as rcv
+
+        s = args.step if args.step is not None else mf.latest_step(store)
+        if s is None:
+            print("no valid checkpoints")
+            return 1
+        if args.fence:
+            epoch = rcv.fence_host(store, args.host)
+            print(f"fenced host {args.host} at epoch {epoch}")
+        mgr = CheckNRunManager(store, CheckpointConfig(async_write=False))
+        before = store.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+        try:
+            try:
+                rs = mgr.restore_part(args.host, s)
+                kind = "partial"
+            except PartialRecoveryError as e:
+                print(f"partial recovery unavailable ({e.kind}): {e.detail}")
+                print("falling back to full restore")
+                try:
+                    rs = mgr.restore(s, on_corruption="fallback")
+                except (KeyError, FileNotFoundError, ValueError) as e2:
+                    print(f"full restore failed too: {e2}")
+                    return 1
+                kind = "full"
+        finally:
+            mgr.close()
+        wall = time.monotonic() - t0
+        nbytes = store.counters.snapshot()["bytes_read"] - before
+        rows = sum(t.shape[0] for t in rs.tables.values())
+        print(f"recovered host {args.host} ({kind}) at step {rs.step} "
+              f"(chain of {rs.chain_len}): {rows:,} rows across "
+              f"{len(rs.tables)} tables, {nbytes:,} bytes fetched "
+              f"in {wall:.2f}s")
+        if kind == "partial":
+            for name, rng in sorted(
+                    rs.extra["shard"]["row_range"].items()):
+                print(f"  table {name}: rows [{rng[0]}, {rng[1]})")
+        if rs.degraded_from is not None:
+            print(f"DEGRADED: step {rs.degraded_from} was unrestorable; "
+                  f"recovered from older step {rs.step} — the gap is lost "
+                  f"training to redo")
+        return 0
+
     steps = mf.list_steps(store)
     if not steps:
         print("no valid checkpoints")
@@ -312,15 +376,37 @@ def main(argv=None):
         # clock is recorded (timings live in SaveResult, not the store)
         wall = "n/a (sharded)" if m.shards else f"{m.wall_time_s:.2f}s"
         print(f"total bytes: {m.nbytes_total:,}  wall: {wall}")
+        if m.extra.get("degraded_from"):
+            d = m.extra["degraded_from"]
+            print(f"DEGRADED LINEAGE: this chain was fallback-restored "
+                  f"({d.get('reason', '?')}; resumed from step "
+                  f"{d.get('restored_step', '?')})")
         if m.shards:
             hosts = mf.list_part_hosts(store, m.step)
             print(f"sharded: {m.shards['num_hosts']} hosts "
                   f"({len(hosts)} parts durable)")
+            # per-host shard coverage; a retention/GC-reclaimed part
+            # manifest (benign — payload intact) is reconstructed from the
+            # global manifest's host-namespaced chunk keys, same as
+            # restore_part does
             for p in m.shards["parts"]:
-                part = mf.load_part(store, m.step, p["host"])
-                print(f"  host {p['host']:>3}: {part.nbytes_total:,} bytes "
-                      f"in {sum(len(r.chunks) for r in part.tables.values())}"
-                      f" chunks")
+                h = p["host"]
+                note = ""
+                try:
+                    part = mf.load_part(store, m.step, h)
+                    chunks = [ch for rec in part.tables.values()
+                              for ch in rec.chunks]
+                    nbytes = part.nbytes_total
+                except (KeyError, FileNotFoundError):
+                    prefix = mf.chunk_host_prefix(m.step, h)
+                    chunks = [ch for rec in m.tables.values()
+                              for ch in rec.chunks
+                              if ch.key.startswith(prefix)]
+                    nbytes = sum(ch.nbytes for ch in chunks)
+                    note = "  (part manifest reclaimed; payload intact)"
+                rows = sum(ch.n_rows for ch in chunks)
+                print(f"  host {h:>3}: {rows:,} rows, {nbytes:,} bytes "
+                      f"in {len(chunks)} chunks{note}")
         chain = mf.recovery_chain(store, s)
         print(f"recovery chain: {[c.step for c in chain]}")
         for name, rec in m.tables.items():

@@ -22,7 +22,12 @@ from ..core.checkpoint import CheckNRunManager, CheckpointConfig
 from ..core.reader_protocol import ReaderLease
 from ..core.storage import ObjectStore
 from ..data.reader import DataReader
-from ..train.state import TrainState, restore_train_state, state_to_snapshot
+from ..train.state import (
+    TrainState,
+    restore_train_state,
+    splice_shard_state,
+    state_to_snapshot,
+)
 from ..train.steps import make_train_step
 
 
@@ -62,6 +67,17 @@ class Trainer:
         self.state: Optional[TrainState] = None
         self.history: List[Dict[str, float]] = []
         self.stall_times: List[float] = []
+        # last 2 checkpoint-boundary snapshots, keyed by step — host-side
+        # arrays (take_snapshot copies off-device, so they survive buffer
+        # donation by the jitted step). Exact-mode partial recovery rolls
+        # SURVIVORS back from these for free: zero bytes fetched, only the
+        # failed shard is replayed from the store.
+        self._boundary_snaps: Dict[int, Any] = {}
+        # restore provenance to stamp into the next save's manifest extra
+        # ("degraded_from"): set when a restore/recovery fell back past the
+        # step we asked for, so `ckpt show` can surface the lineage gap
+        self._provenance: Optional[Dict[str, Any]] = None
+        self.last_recovery: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ lifecycle
     def init_or_restore(self) -> int:
@@ -77,6 +93,11 @@ class Trainer:
                                              self.bundle.tracked)
             start_batch = restored.extra.get("reader", {}).get("next_batch",
                                                                int(restored.step))
+            if restored.degraded_from is not None:
+                self._provenance = {
+                    "requested_step": restored.degraded_from,
+                    "restored_step": int(restored.step),
+                    "reason": "corrupt-chain fallback"}
         if self.cfg.use_reader_tier:
             from ..core.reader_protocol import ReaderState
             self.reader = DataReader(
@@ -118,9 +139,18 @@ class Trainer:
             # reader has delivered exactly `interval` batches — no in-flight gap
             assert self.reader.in_flight() == 0, "reader-trainer gap!"
             extra["reader"] = self.reader.checkpoint_state().to_dict()
+        if self._provenance is not None:
+            extra["degraded_from"] = self._provenance
+            self._provenance = None
         t0 = time.monotonic()
         snap = state_to_snapshot(self.state, self.bundle.tracked, extra)
         self.stall_times.append(time.monotonic() - t0)
+        # retain the two most recent boundary snapshots for exact-mode
+        # partial recovery (the previous boundary matters when the save at
+        # THIS boundary is the one that dies uncommitted)
+        self._boundary_snaps[snap.step] = snap
+        for s in sorted(self._boundary_snaps)[:-2]:
+            del self._boundary_snaps[s]
         # training may continue: reset the on-device touched masks and renew
         # the reader lease for the next interval
         self.state = TrainState(
@@ -130,12 +160,138 @@ class Trainer:
             rng=self.state.rng)
         if self.reader is not None:
             self.lease.renew()
-        self.manager.save(snap)
+        fut = self.manager.save(snap)
+        if not self.ckpt_cfg.async_write:
+            # synchronous saves park their exception in the returned
+            # future; surface it HERE (at the boundary that failed) rather
+            # than from the next interval's non-overlap wait — the partial
+            # recovery path keys off which save raised
+            fut.result()
+
+    # ------------------------------------------------------ partial recovery
+    def _reset_reader(self, start_batch: int) -> None:
+        """Rebuild the reader tier at a rolled-back batch cursor (the old
+        lease/reader pair may be mid-interval and cannot be rewound)."""
+        if not self.cfg.use_reader_tier:
+            return
+        from ..core.reader_protocol import ReaderState
+
+        if self.reader is not None:
+            self.reader.close()
+        self.lease = ReaderLease(self.ckpt_cfg.interval_batches)
+        self.reader = DataReader(self.batch_fn, lease=self.lease,
+                                 state=ReaderState(next_batch=start_batch))
+        self.lease.set_limit(start_batch + self.ckpt_cfg.interval_batches)
+
+    def recover_host(self, host: int, mode: str = "exact",
+                     step: Optional[int] = None,
+                     supervisor=None) -> int:
+        """Recover from the loss of ONE host's shard without restarting the
+        survivors (docs/partial_recovery.md). Replays only that host's
+        shard chain from the committed checkpoint, splices it into a
+        rebuilt/live TrainState, re-fences touched + optimizer bookkeeping
+        for the shard, and resets the reader tier. Returns the step
+        training resumes from.
+
+        Staleness policy:
+
+        * ``exact`` — survivors ALSO roll back to the committed step, from
+          the retained in-memory boundary snapshot (zero store bytes);
+          the resumed run is bit-identical to a never-failed run when the
+          checkpoint is unquantized. Falls back to a full restore when the
+          boundary snapshot is not retained (e.g. a fresh process).
+        * ``cpr`` — survivors keep their LIVE state; only the failed
+          shard's rows are overwritten with the committed (stale) values,
+          per CPR's partial-staleness model. Training resumes from the
+          live step with no lost work on survivors.
+
+        Either way, an unrecoverable shard degrades to a full
+        ``restore()`` (kind == "full" in ``last_recovery``) — everything
+        rolls back and the degradation is stamped into the next save's
+        manifest as ``degraded_from``.
+        """
+        from ..core import manifest as mf
+        from ..dist.recovery import RecoverySupervisor
+
+        if mode not in ("exact", "cpr"):
+            raise ValueError(f"unknown staleness mode {mode!r}")
+        sup = supervisor or RecoverySupervisor(self.manager.store,
+                                               self.ckpt_cfg.num_hosts)
+        committed = step if step is not None \
+            else mf.latest_step(self.manager.store)
+        if committed is None:
+            raise FileNotFoundError("no committed checkpoint to recover from")
+        rs = sup.recover(self.manager, host, step=committed)
+        info = dict(rs.extra.get("recovery", {}))
+        info["mode"] = mode
+        template = self.bundle.make_state()
+
+        if info.get("kind") == "full":
+            # shard chain unrecoverable — O(model) fallback; restore()
+            # already resynced the manager's policy + masks
+            self.state = restore_train_state(template, rs,
+                                             self.bundle.tracked)
+            self._provenance = {
+                "requested_host": host,
+                "restored_step": int(rs.step),
+                "reason": rs.extra.get("recovery_fallback_reason",
+                                       "full-restore fallback")}
+            self._reset_reader(rs.extra.get("reader", {})
+                               .get("next_batch", int(rs.step)))
+            self.last_recovery = info
+            return int(rs.step)
+
+        ranges = rs.extra["shard"]["row_range"]
+        if mode == "cpr":
+            self.state = splice_shard_state(self.state, rs,
+                                            self.bundle.tracked)
+            self.manager.refence_shard(ranges)
+            self.last_recovery = info
+            return int(jax.device_get(self.state.step))
+
+        # exact: rebuild survivors from the retained boundary snapshot
+        # (already host-side arrays at exactly the committed step), then
+        # splice the failed shard from what the store replayed
+        base = self._boundary_snaps.get(int(rs.step))
+        if base is None:
+            full = self.manager.restore(int(rs.step),
+                                        on_corruption="fallback")
+            self.manager._count(recoveries_full_total=1,
+                                last_recovery_host=host)
+            info["kind"] = "full"
+            self.state = restore_train_state(template, full,
+                                             self.bundle.tracked)
+            self._reset_reader(full.extra.get("reader", {})
+                               .get("next_batch", int(full.step)))
+            self.last_recovery = info
+            return int(full.step)
+        self.state = restore_train_state(template, _SnapshotRestored(base),
+                                         self.bundle.tracked)
+        self.state = splice_shard_state(self.state, rs, self.bundle.tracked)
+        self.manager.resync_from(int(rs.step))
+        self._reset_reader(base.extra.get("reader", {})
+                           .get("next_batch", int(rs.step)))
+        self.last_recovery = info
+        return int(rs.step)
 
     def close(self) -> None:
         if self.reader is not None:
             self.reader.close()
         self.manager.close()
+
+
+class _SnapshotRestored:
+    """Adapter presenting a boundary Snapshot through the RestoredState
+    attributes ``restore_train_state`` reads (tables / row_state / dense /
+    step) — the snapshot's dense dict already carries "step" and "rng"."""
+
+    def __init__(self, snap) -> None:
+        self.step = snap.step
+        self.tables = snap.tables
+        self.row_state = snap.row_state
+        self.dense = snap.dense
+        self.extra = snap.extra
+        self.degraded_from = None
 
 
 class SimulatedFailure(RuntimeError):

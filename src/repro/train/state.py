@@ -204,6 +204,59 @@ def restore_train_state(template: TrainState, restored,
     return new_state
 
 
+def splice_shard_state(state: TrainState, restored,
+                       specs: Dict[str, TrackedSpec]) -> TrainState:
+    """Overwrite ONLY one recovered shard's rows of a live TrainState.
+
+    ``restored`` is a ``CheckNRunManager.restore_part`` result: shard-sized
+    table/aux arrays plus ``extra["shard"]["row_range"]`` naming each
+    table's ``[lo, hi)``. Every row outside the ranges — including all of
+    the dense params/opt and the step/rng — keeps its LIVE value: this is
+    the CPR staleness model (only the failed shard rolls back to the
+    checkpoint) and the exact-mode shard splice (where the caller first
+    rebuilt the survivors from the boundary snapshot, so "live" already
+    means "at the committed step").
+
+    The spliced rows' touched bits are re-fenced to False: they now hold
+    the last committed values, so a since-last-commit touched claim for
+    them is stale (the manager-side mask twin is
+    ``CheckNRunManager.refence_shard``). For coarse-tracked specs
+    (``expansion > 1``) any unit OVERLAPPING the range is cleared — the
+    range is always unit-aligned for shard recoveries (row_shard_bounds
+    splits the same 2-D view the expansion maps to), so no partial unit
+    loses a legitimate claim.
+    """
+    shard = (restored.extra or {}).get("shard") or {}
+    ranges = shard.get("row_range") or {}
+    params = state.params
+    opt = state.opt_state
+    touched = dict(state.touched)
+    for name, spec in specs.items():
+        if name not in restored.tables or name not in ranges:
+            continue
+        lo, hi = ranges[name]
+        orig = tree_get(params, spec.path)
+        flat = orig.reshape(spec.rows, spec.dim)
+        flat = flat.at[lo:hi].set(
+            jnp.asarray(restored.tables[name], dtype=orig.dtype))
+        params = tree_set(params, spec.path, flat.reshape(orig.shape))
+        aux = restored.row_state.get(name, {})
+        opt_leaf = _find_opt_leaf(opt, spec.path)
+        if opt_leaf is not None and "opt_acc" in aux:
+            opt = tree_set(opt, spec.path, opt_leaf.at[lo:hi].set(
+                jnp.asarray(aux["opt_acc"], dtype=opt_leaf.dtype)))
+        elif opt_leaf is not None and "opt_acc2d" in aux:
+            flat_o = opt_leaf.reshape(spec.rows, -1)
+            flat_o = flat_o.at[lo:hi].set(
+                jnp.asarray(aux["opt_acc2d"], dtype=opt_leaf.dtype))
+            opt = tree_set(opt, spec.path, flat_o.reshape(opt_leaf.shape))
+        ulo = lo // spec.expansion
+        uhi = -(-hi // spec.expansion)  # ceil — clear any overlapping unit
+        touched[name] = touched[name].at[ulo:uhi].set(False)
+    return TrainState(step=state.step, params=params, opt_state=opt,
+                      touched=touched, rng=state.rng)
+
+
 def _restore_dense(tree, flat: Dict[str, np.ndarray], root=("dense",)):
     """Write flattened host arrays back into the pytree by keystr match."""
     if root == ("dense",):

@@ -6,11 +6,29 @@ import and their deterministic tests still run; only the ``@given`` tests
 are skipped.
 """
 
+import os
 import sys
 import types
 
 import numpy as np
 import pytest
+
+
+def cell_shard(items):
+    """Filter a nightly cell list down to this CI shard.
+
+    ``CNR_CELL_SHARD="i/n"`` keeps items round-robin (``index % n == i``)
+    so each shard gets an even mix of cheap and expensive architectures
+    rather than a contiguous run of the slowest ones. Unset (the default,
+    and every local run) returns everything.
+    """
+    spec = os.environ.get("CNR_CELL_SHARD", "")
+    if not spec:
+        return list(items)
+    i, n = (int(x) for x in spec.split("/"))
+    if not 0 <= i < n:
+        raise ValueError(f"bad CNR_CELL_SHARD {spec!r}: want i/n with 0<=i<n")
+    return [item for k, item in enumerate(items) if k % n == i]
 
 
 @pytest.fixture

@@ -11,9 +11,21 @@ import textwrap
 
 import pytest
 
+from tests.conftest import cell_shard
+
 # multi-minute training-stack tests: excluded from the fast CI set
-# (`-m "not slow"`), exercised by the scheduled full job
+# (`-m "not slow"`), exercised by the scheduled full job — sharded across
+# a CI matrix via CNR_CELL_SHARD="i/n" (see conftest.cell_shard)
 pytestmark = pytest.mark.slow
+
+_N_MESH_TESTS = 3
+
+
+def _shard_guard(idx: int) -> None:
+    """Skip unless this mesh test's index lands in the active CI shard."""
+    if idx not in cell_shard(list(range(_N_MESH_TESTS))):
+        pytest.skip(f"assigned to another CNR_CELL_SHARD shard "
+                    f"({os.environ.get('CNR_CELL_SHARD')})")
 
 
 def _run(code: str):
@@ -26,6 +38,7 @@ def _run(code: str):
 
 
 def test_ep_moe_equals_dense_dispatch():
+    _shard_guard(0)
     _run("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -56,6 +69,7 @@ def test_ep_moe_equals_dense_dispatch():
 
 
 def test_sharded_dimenet_equals_plain():
+    _shard_guard(1)
     _run("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -89,6 +103,7 @@ def test_sharded_dimenet_equals_plain():
 def test_sharded_train_matches_single_device():
     """One dlrm train step on a 2×2 mesh produces the same loss/params as
     the single-device step (sharding must not change semantics)."""
+    _shard_guard(2)
     _run("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -7,15 +7,19 @@ import pytest
 
 from repro.configs import ARCHS, arch_shapes, get_cell
 from repro.data.cells import batch_for_cell
+from tests.conftest import cell_shard
 
 # multi-minute training-stack tests: excluded from the fast CI set
-# (`-m "not slow"`), exercised by the scheduled full job
+# (`-m "not slow"`), exercised by the scheduled full job — sharded across
+# a CI matrix via CNR_CELL_SHARD="i/n" (see conftest.cell_shard)
 pytestmark = pytest.mark.slow
 
 CELLS = [(a, s) for a in ARCHS for s in arch_shapes(a)]
+SHARD_CELLS = cell_shard(CELLS)
 
 
-@pytest.mark.parametrize("arch,shape", CELLS, ids=[f"{a}-{s}" for a, s in CELLS])
+@pytest.mark.parametrize("arch,shape", SHARD_CELLS,
+                         ids=[f"{a}-{s}" for a, s in SHARD_CELLS])
 def test_cell_smoke(arch, shape):
     bundle = get_cell(arch, shape, reduced=True)
     batch = batch_for_cell(bundle, 0)
@@ -45,7 +49,8 @@ def test_cell_smoke(arch, shape):
                 assert np.all(np.isfinite(arr.astype(np.float32)))
 
 
-@pytest.mark.parametrize("arch", ["dlrm-rm2", "bert4rec", "olmoe-1b-7b"])
+@pytest.mark.parametrize("arch",
+                         cell_shard(["dlrm-rm2", "bert4rec", "olmoe-1b-7b"]))
 def test_loss_decreases(arch):
     """A few steps of training reduce the loss on the synthetic stream."""
     shape = "train_batch" if arch != "olmoe-1b-7b" else "train_4k"
