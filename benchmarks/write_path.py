@@ -831,6 +831,91 @@ def bench_recovery(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_resharding(args, qcfg: QuantConfig) -> dict:
+    """Elastic N→M restore (docs/resharding.md) over the throttled read
+    model: save the snapshot sharded ``n_src`` ways, then range-read EVERY
+    target shard of an ``n_tgt``-host layout via
+    ``restore_part(..., num_hosts=)`` — no rewrite of the chain, the
+    planner resolves each target range across the union of source shards.
+
+    Gates: each new host fetches ≈ its OWN target shard (bounded by the
+    range plan's own cost estimate, ``shard_nbytes(..., num_hosts=)``,
+    plus metadata overhead — NOT O(model)), and every target shard is
+    byte-identical to the full restore's slice of its row ranges."""
+    from repro.dist import recovery as rcv
+
+    snap = make_workload(args.tables, args.rows, args.dim, seed=5,
+                         dense_dim=32)
+    meta_slack = 262_144  # global manifest + part JSONs per read
+    sweep = []
+    matches = True
+    for n_src, n_tgt in args.reshard_pairs:
+        store = InMemoryStore()
+        mgr = CheckNRunManager(store, CheckpointConfig(
+            policy="full_only", quant=qcfg, async_write=False,
+            chunk_rows=args.chunk_rows, num_hosts=n_src,
+            encode_workers=args.encode_workers,
+            write_workers=args.write_workers))
+        mgr.save(snap).result()
+
+        # unthrottled full restore: the byte-identity reference
+        full = mgr.restore(1)
+        full_bytes = sum(m.nbytes_total for m in
+                         mf.recovery_chain(store, 1))
+        mgr.close()
+
+        hosts = []
+        o_shard = True
+        for h in range(n_tgt):
+            view = ThrottledStore(
+                store, write_bytes_per_sec=1e12,
+                read_bytes_per_sec=args.read_mbps * 1e6,
+                read_latency_s=args.read_latency_ms / 1e3)
+            pmgr = CheckNRunManager(view, CheckpointConfig(
+                policy="full_only", quant=qcfg, async_write=False,
+                chunk_rows=args.chunk_rows,
+                restore_workers=args.restore_workers,
+                decode_workers=args.decode_workers))
+            budget = rcv.shard_nbytes(store, h, 1, num_hosts=n_tgt)
+            b0 = view.counters.snapshot()["bytes_read"]
+            t0 = time.monotonic()
+            rs = pmgr.restore_part(h, 1, num_hosts=n_tgt)
+            wall = time.monotonic() - t0
+            nbytes = view.counters.snapshot()["bytes_read"] - b0
+            pmgr.close()
+            if not rs.extra["shard"]["resharded"]:
+                raise AssertionError(
+                    f"{n_src}->{n_tgt} host {h}: read not flagged resharded")
+            for name in snap.tables:
+                lo, hi = rs.extra["shard"]["row_range"][name]
+                if not np.array_equal(rs.tables[name],
+                                      full.tables[name][lo:hi]):
+                    matches = False
+            ok = nbytes <= budget + meta_slack
+            o_shard = o_shard and ok
+            hosts.append({"host": h, "wall_s": round(wall, 4),
+                          "bytes": nbytes, "planned_bytes": budget,
+                          "bytes_o_shard": ok})
+        sweep.append({
+            "src_hosts": n_src, "tgt_hosts": n_tgt,
+            "full_chain_bytes": full_bytes,
+            "hosts": hosts,
+            "bytes_o_shard": o_shard,
+            # every target host could restore CONCURRENTLY at ≈ 1/M of
+            # the payload each; the sum stays ≈ one full restore
+            "sum_bytes_ratio": round(
+                sum(r["bytes"] for r in hosts) / max(full_bytes, 1), 3),
+        })
+    return {
+        "config": {"tables": args.tables, "rows": args.rows,
+                   "dim": args.dim, "bits": qcfg.bits,
+                   "method": qcfg.method, "read_mbps": args.read_mbps,
+                   "pairs": [list(p) for p in args.reshard_pairs]},
+        "sweep": sweep,
+        "matches_full_slice": matches,
+    }
+
+
 def bench_packing(n_codes: int, extra_bits: int = 4) -> dict:
     rng = np.random.default_rng(0)
     out = {}
@@ -886,6 +971,9 @@ def main(argv=None):
     ap.add_argument("--recovery-hosts", default="2,4,8",
                     help="comma-separated host counts for the partial-vs-"
                          "full recovery sweep (empty string skips it)")
+    ap.add_argument("--reshard-pairs", default="2:3,4:2",
+                    help="comma-separated src:tgt host-count pairs for the "
+                         "elastic resharding sweep (empty string skips it)")
     # ---- remote store section ----
     ap.add_argument("--remote-error-rates", default="0.05,0.2",
                     help="seeded fault-injection error rates for the remote "
@@ -935,6 +1023,8 @@ def main(argv=None):
     args.recovery_hosts = [int(n) for n in
                            str(args.recovery_hosts).split(",") if n]
     args.mp_hosts = [int(n) for n in str(args.mp_hosts).split(",") if n]
+    args.reshard_pairs = [tuple(int(x) for x in p.split(":"))
+                          for p in str(args.reshard_pairs).split(",") if p]
     args.remote_error_rates = [float(r) for r in
                                str(args.remote_error_rates).split(",") if r]
     if args.tiny and args.multiprocess_only:
@@ -1030,6 +1120,13 @@ def main(argv=None):
         recov = bench_recovery(args, qcfg)
         print(json.dumps(recov, indent=1))
 
+    reshard = None
+    if args.reshard_pairs:
+        print(f"== elastic resharding {args.reshard_pairs} "
+              f"(N->M range reads, {args.read_mbps} MB/s reads) ==")
+        reshard = bench_resharding(args, qcfg)
+        print(json.dumps(reshard, indent=1))
+
     print(f"== packing microbench ({args.pack_codes} codes) ==")
     pack = bench_packing(args.pack_codes, extra_bits=args.bits)
     print(json.dumps(pack, indent=1))
@@ -1044,6 +1141,7 @@ def main(argv=None):
         "remote": remote,
         "multiprocess": multiproc,
         "recovery": recov,
+        "resharding": reshard,
         "packing": pack,
         "acceptance": {
             "e2e_speedup_ge_3x": e2e["speedup_e2e"] >= 3.0,
@@ -1079,6 +1177,14 @@ def main(argv=None):
                 if recov else None),
             "partial_recovery_matches_full_slice": (
                 recov["partial_matches_full_slice"] if recov else None),
+            # elastic N->M restore: each new host fetches ≈ its own
+            # target shard per the range plan's estimate, and every
+            # target shard equals the full restore's slice
+            "resharding_bytes_o_shard": (
+                all(r["bytes_o_shard"] for r in reshard["sweep"])
+                if reshard else None),
+            "resharding_matches_full_slice": (
+                reshard["matches_full_slice"] if reshard else None),
         },
     }
     with open(args.out, "w") as f:

@@ -44,6 +44,7 @@ import numpy as np
 
 from . import manifest as mf
 from . import packing
+from . import range_reader as rr
 from . import tracker
 from .bitwidth import BitwidthController
 from .coordinator import CommitContext
@@ -167,10 +168,9 @@ class PartialRecoveryError(ValueError):
 
     ``kind`` taxonomy:
 
-    * ``not-sharded`` — the checkpoint has no shard layout at all
-    * ``bad-host`` — host index outside the recorded ``num_hosts``
-    * ``layout-mismatch`` — a chain step was written with a different
-      ``num_hosts`` (the shard's row ranges differ step to step)
+    * ``not-sharded`` — the checkpoint has no shard layout at all (pass
+      ``num_hosts=`` explicitly to range-read an unsharded chain anyway)
+    * ``bad-host`` — host index outside the target ``num_hosts``
     * ``broken-chain`` — a chain manifest is unreadable/quarantined
     * ``missing-part`` — a chain step's part manifest is gone AND its
       chunk payload cannot be reconstructed from the global manifest
@@ -573,7 +573,8 @@ class CheckNRunManager:
             extra=snap.extra | {"bitwidth": self.bitwidth.to_dict() if self.bitwidth else None},
             nbytes_total=total_bytes,
             wall_time_s=time.monotonic() - t_start,
-            created_unix=time.time())
+            created_unix=time.time(),
+            layout=mf.make_layout(1))
         mf.commit(self.store, man)
 
         self._post_commit(step, decision, total_bytes)
@@ -1104,9 +1105,8 @@ class CheckNRunManager:
         def alloc(name: str, rec: mf.TableRecord):
             return np.zeros((rec.rows, rec.dim), dtype=np.float32), 0
 
-        stats = self._replay_chain(
-            [(man, man.tables) for man in chain], chain[-1],
-            tables, row_state, dense, alloc)
+        plan = rr.plan_ranges(chain)
+        stats = self._replay_plan(plan, tables, row_state, dense, alloc)
         final = chain[-1]
         # Resync host bookkeeping + policy so saves after restore are coherent.
         self.policy.load_dict(final.policy)
@@ -1124,31 +1124,39 @@ class CheckNRunManager:
                              dense=dense, extra=final.extra,
                              chain_len=len(chain), stats=stats)
 
-    def restore_part(self, host: int, step: Optional[int] = None) -> RestoredState:
-        """Lazily shard-read ONE host's row-shard of a sharded checkpoint:
-        only that host's part manifests and chunk blobs are fetched (plus
-        the final step's dense params, which are global). Table arrays in
-        the result cover just the host's row range; ``extra["shard"]``
-        records the ranges (everything the train-side splice —
-        ``repro.train.state.splice_shard_state`` — needs to overwrite the
-        shard's rows of a live TrainState). Requires every manifest in the
-        recovery chain to be sharded with the same ``num_hosts``.
+    def restore_part(self, host: int, step: Optional[int] = None,
+                     num_hosts: Optional[int] = None) -> RestoredState:
+        """Lazily range-read ONE host's row-shard of a checkpoint: only the
+        chunks whose row bounds intersect the host's target ranges are
+        fetched (plus the final step's dense params, which are global).
+        Table arrays in the result cover just the host's row range;
+        ``extra["shard"]`` records the ranges (everything the train-side
+        splice — ``repro.train.state.splice_shard_state`` — needs to
+        overwrite the shard's rows of a live TrainState).
+
+        Layout-independent (docs/resharding.md): the target layout is
+        ``num_hosts`` when given — ANY positive count, regardless of how
+        the chain was written — else the final manifest's recorded
+        layout. The range planner (``core/range_reader``) resolves the
+        minimal chunk set across the union of all source shards, so a
+        chain written at N hosts partial-restores onto N±k hosts; chunks
+        straddling a new shard boundary are clip-applied to the
+        intersecting rows. ``extra["shard"]["resharded"]`` flags reads
+        that crossed a layout change.
 
         Structurally or physically unrecoverable shards raise
         :class:`PartialRecoveryError` (typed, with a ``kind``); callers
         fall back to a full :meth:`restore`. A chain step whose part
         manifest was retention/GC-reclaimed but whose payload is intact
         (the benign ``reclaimed-part`` classification in
-        ``core/integrity.py``) does NOT abort the replay: the host's chunk
-        records are reconstructed from the global manifest, whose merged
-        chunk keys retain the ``host_<h>/`` namespace.
+        ``core/integrity.py``) does NOT abort the replay — the global
+        manifest's merged chunk records, whose keys retain the
+        ``host_<h>/`` namespace, carry everything the planner needs.
 
         A reader-side operation: does NOT resync the manager's policy or
         touched-row bookkeeping (use :meth:`restore`, or the partial-
         recovery splice path in ``repro.train.loop``, to resume
         training)."""
-        from ..dist.sharding import row_shard_bounds
-
         store = self.store
         if step is None:
             step = mf.latest_step(store)
@@ -1162,40 +1170,44 @@ class CheckNRunManager:
                 host, step, "broken-chain",
                 f"recovery chain unreadable: {e}") from e
         final = chain[-1]
-        num_hosts = (final.shards or {}).get("num_hosts")
-        if num_hosts is None:
-            raise PartialRecoveryError(
-                host, step, "not-sharded",
-                f"checkpoint {step} is not sharded; use restore()")
-        if not 0 <= host < num_hosts:
+        src_n = rr.layout_num_hosts(final)
+        tgt = num_hosts
+        if tgt is None:
+            tgt = (final.shards or {}).get("num_hosts")
+            if tgt is None:
+                raise PartialRecoveryError(
+                    host, step, "not-sharded",
+                    f"checkpoint {step} is not sharded; use restore(), or "
+                    f"pass num_hosts= to range-read it under a new layout")
+        if not 0 <= host < tgt:
             raise PartialRecoveryError(
                 host, step, "bad-host",
-                f"host {host} out of range for {num_hosts} hosts")
-        for man in chain:
-            if (man.shards or {}).get("num_hosts") != num_hosts:
-                raise PartialRecoveryError(
-                    host, step, "layout-mismatch",
-                    f"recovery chain step {man.step} has a different shard "
-                    f"layout; use restore()")
+                f"host {host} out of range for {tgt} hosts")
+
+        targets = rr.shard_targets(final.tables, host, tgt)
+        try:
+            plan = rr.plan_ranges(chain, targets, check_coverage=True)
+        except rr.RangeCoverageError as e:
+            raise PartialRecoveryError(
+                host, step, "missing-part", str(e)) from e
+        self._check_shard_witness(chain, targets, host, step)
+        resharded = any(n != tgt for n in plan.source_layouts)
 
         tables: Dict[str, np.ndarray] = {}
         row_state: Dict[str, Dict[str, np.ndarray]] = {}
         ranges: Dict[str, List[int]] = {}
-        records = [self._host_records(man, host) for man in chain]
 
         def alloc(name: str, rec: mf.TableRecord):
-            # shard-sized scratch: a host's chunks only reference rows in
-            # its range, scattered at offset -lo — memory stays O(shard),
-            # not O(table)
-            lo, hi = row_shard_bounds(rec.rows, num_hosts)[host]
+            # shard-sized scratch: planned chunks are clip-applied to rows
+            # in the target range, scattered at offset -lo — memory stays
+            # O(shard), not O(table)
+            lo, hi = targets.get(name, [0, rec.rows])
             ranges[name] = [lo, hi]
             return np.zeros((hi - lo, rec.dim), np.float32), lo
 
         dense: Dict[str, np.ndarray] = {}
         try:
-            stats = self._replay_chain(
-                list(zip(chain, records)), final, tables, row_state, dense,
-                alloc)
+            stats = self._replay_plan(plan, tables, row_state, dense, alloc)
         except ChunkCorruptionError as e:
             self._count(corruption_errors_total=1)
             raise PartialRecoveryError(
@@ -1207,44 +1219,71 @@ class CheckNRunManager:
                 host, step, "corrupt-chunk",
                 f"shard chunk blob unreadable: {e}") from e
         extra = dict(final.extra)
-        extra["shard"] = {"host": host, "num_hosts": num_hosts,
-                          "row_range": ranges}
-        rows_replayed = sum(ch.n_rows for recs in records
-                            for rec in recs.values() for ch in rec.chunks)
-        self._count(recoveries_partial_total=1,
-                    restore_bytes_total=int(stats.get("payload_bytes", 0)),
+        extra["shard"] = {"host": host, "num_hosts": tgt,
+                          "row_range": ranges, "resharded": resharded,
+                          "source_num_hosts": src_n,
+                          "source_layouts": [int(n)
+                                             for n in plan.source_layouts]}
+        rows_replayed = sum(pr.chunk.n_rows for pr in plan.reads)
+        kind_count = (dict(recoveries_resharded_total=1) if resharded
+                      else dict(recoveries_partial_total=1))
+        self._count(restore_bytes_total=int(stats.get("payload_bytes", 0)),
                     recovery_rows_replayed_total=int(rows_replayed),
                     last_recovery_wall_s=time.monotonic() - t0,
-                    last_recovery_host=host)
+                    last_recovery_host=host,
+                    last_recovery_source_hosts=src_n,
+                    last_recovery_target_hosts=int(tgt),
+                    **kind_count)
         return RestoredState(step=final.step, tables=tables,
                              row_state=row_state, dense=dense, extra=extra,
                              chain_len=len(chain), stats=stats)
 
-    def _host_records(self, man: mf.Manifest,
-                      host: int) -> Dict[str, mf.TableRecord]:
-        """One chain step's table records for ``host`` — from its part
-        manifest, or (when the part was retention/GC-reclaimed under an
-        intact payload: ``_delete_step_batch`` votes-first debris, the
-        benign ``reclaimed-part`` scan classification) reconstructed by
-        filtering the global manifest's merged chunk records down to the
-        host's ``chunks/ckpt_<step>/host_<h>/`` namespace."""
-        try:
-            return mf.load_part(self.store, man.step, host).tables
-        except (KeyError, FileNotFoundError) as e:
-            prefix = mf.chunk_host_prefix(man.step, host)
-            out: Dict[str, mf.TableRecord] = {}
+    def _check_shard_witness(self, chain: List[mf.Manifest],
+                             targets: Dict[str, List[int]], host: int,
+                             step: int) -> None:
+        """Distinguish "this source host touched no rows" from "this source
+        host's chunk records are LOST". The planner treats a sharded chain
+        step with no chunks for some source host as a legitimately-empty
+        increment — but when that host's writer shard intersects the
+        target ranges, its durable part manifest is consulted as the
+        tie-breaker: part gone too (nothing reconstructable) or part
+        contradicting the global manifest ⇒ the shard data is gone ⇒
+        typed ``missing-part``, exactly the refusal the pre-planner
+        shard reader raised."""
+        for man in chain:
+            if not man.tables:
+                continue
+            src_n = rr.layout_num_hosts(man)
+            if src_n <= 1:
+                continue  # single-host chunks aren't host-namespaced
+            needed = set()
             for name, rec in man.tables.items():
-                chunks = [ch for ch in rec.chunks
-                          if ch.key.startswith(prefix)]
-                out[name] = dataclasses.replace(rec, chunks=chunks)
-            if not any(r.chunks for r in out.values()) and man.tables:
-                # nothing in the global manifest names this host's
-                # namespace either — the shard data is truly gone
-                raise PartialRecoveryError(
-                    host, man.step, "missing-part",
-                    f"part manifest absent and no host chunks recorded "
-                    f"in the global manifest: {e}") from e
-            return out
+                tgt_rng = targets.get(name)
+                if tgt_rng is None:
+                    continue
+                tlo, thi = tgt_rng
+                bounds = rr.row_shard_bounds(rec.rows, src_n)
+                for h, (lo, hi) in enumerate(bounds):
+                    if lo < hi and lo < thi and tlo < hi:
+                        needed.add(h)
+            recorded = {rr.host_of_chunk_key(ch.key)
+                        for rec in man.tables.values()
+                        for ch in rec.chunks}
+            for h in sorted(needed - recorded):
+                try:
+                    part = mf.load_part(self.store, man.step, h)
+                except (KeyError, FileNotFoundError) as e:
+                    raise PartialRecoveryError(
+                        host, step, "missing-part",
+                        f"chain step {man.step}: no chunks recorded for "
+                        f"source host {h} and its part manifest is "
+                        f"gone") from e
+                if any(r.chunks for r in part.tables.values()):
+                    raise PartialRecoveryError(
+                        host, step, "missing-part",
+                        f"chain step {man.step}: the global manifest "
+                        f"records no chunks for source host {h} but its "
+                        f"part manifest does — merged records damaged")
 
     def resync_from(self, step: int) -> None:
         """Resync the manager's incremental-policy and touched-row
@@ -1278,49 +1317,72 @@ class CheckNRunManager:
                 if m is not None and hi <= len(m):
                     m[lo:hi] = False
 
-    # ------------------------------------------------- streaming chain replay
-    def _replay_chain(self, chain_records, final_man: mf.Manifest,
-                      tables: Dict[str, np.ndarray],
-                      row_state: Dict[str, Dict[str, np.ndarray]],
-                      dense: Dict[str, np.ndarray], alloc_fn) -> dict:
-        """Stream every chunk of the recovery chain through one bounded
+    # ------------------------------------------------- streaming plan replay
+    def _replay_plan(self, plan: "rr.RangePlan",
+                     tables: Dict[str, np.ndarray],
+                     row_state: Dict[str, Dict[str, np.ndarray]],
+                     dense: Dict[str, np.ndarray], alloc_fn) -> dict:
+        """Stream a range plan's chunks through one bounded
         fetch→decode→apply pipeline (docs/write_path.md, "decode path").
 
-        All manifests' chunks are submitted up front (the window bounds
+        All planned reads are submitted up front (the window bounds
         in-flight memory to O(window)), so increment chunks prefetch from
         the store while the baseline is still being dequantized and
         applied. Fetch and decode run concurrently and out of order; the
-        single ordered applier scatters in submission order, which IS chain
-        order — a later manifest's rows always overwrite an earlier one's.
-        ``chain_records`` is ``[(manifest, {name: TableRecord})]`` (part
-        manifests' records for shard reads); ``alloc_fn(name, rec) ->
-        (array, row_offset)`` sizes the output (whole table or one shard).
-        The final manifest's dense params ride the same pipeline.
-        """
+        single ordered applier scatters in submission order, which IS the
+        plan's chain order — a later manifest's rows always overwrite an
+        earlier one's. ``alloc_fn(name, rec) -> (array, row_offset)``
+        sizes the output (whole table or one target shard); chunks whose
+        row bound straddles a target boundary are clipped in the decode
+        stage (``range_reader.clip_decoded``) so only intersecting rows
+        are scattered. The final manifest's dense params ride the same
+        pipeline."""
         cfg = self.config
+        final_man = plan.chain[-1]
+        offsets: Dict[str, int] = {}
+
+        def decode_clipped(step, name, rec, ch, tlo, thi, data):
+            return rr.clip_decoded(
+                self._decode_chunk(step, name, rec, ch, data), tlo, thi)
+
+        # allocate on first MENTION in the chain (not first planned read):
+        # a table whose target shard is empty, or whose increments touched
+        # nothing, must still appear in the result with its (possibly
+        # zero-row) array and range recorded
+        for man in plan.chain:
+            for name, rec in man.tables.items():
+                if plan.targets is not None and name not in plan.targets:
+                    continue
+                if name not in tables:
+                    tables[name], offsets[name] = alloc_fn(name, rec)
+                    row_state[name] = {}  # aux allocated lazily (width
+                    #                       varies by checkpoint config)
         pipe = RestorePipeline(fetch_workers=cfg.restore_workers,
                                decode_workers=cfg.decode_workers,
                                max_inflight=cfg.restore_inflight)
-        offsets: Dict[str, int] = {}
         try:
-            for man, records in chain_records:
-                for name, rec in records.items():
-                    if name not in tables:
-                        tables[name], offsets[name] = alloc_fn(name, rec)
-                        row_state[name] = {}  # aux allocated lazily (width
-                        #                       varies by checkpoint config)
-                    out = tables[name]
-                    aux_out = row_state[name]
-                    off = offsets[name]
-                    for ch in rec.chunks:
-                        if ch.n_rows == 0:
-                            continue
-                        pipe.submit(
-                            functools.partial(self.store.get, ch.key),
-                            functools.partial(self._decode_chunk, man.step,
-                                              name, rec, ch),
-                            functools.partial(self._apply_decoded, out,
-                                              aux_out, rec, ch, off))
+            for pr in plan.reads:
+                name, rec, ch = pr.table, pr.rec, pr.chunk
+                if plan.targets is None:
+                    decode = functools.partial(self._decode_chunk,
+                                               pr.man.step, name, rec, ch)
+                else:
+                    tlo, thi = plan.targets[name]
+                    if pr.bound[0] >= tlo and pr.bound[1] <= thi:
+                        # bound (hence every row) inside the target
+                        decode = functools.partial(self._decode_chunk,
+                                                   pr.man.step, name, rec,
+                                                   ch)
+                    else:
+                        decode = functools.partial(decode_clipped,
+                                                   pr.man.step, name, rec,
+                                                   ch, tlo, thi)
+                pipe.submit(
+                    functools.partial(self.store.get, ch.key),
+                    decode,
+                    functools.partial(self._apply_decoded, tables[name],
+                                      row_state[name], rec, ch,
+                                      offsets[name]))
             for key_name, drec in final_man.dense.items():
                 pipe.submit(
                     functools.partial(self.store.get, drec.key),

@@ -178,7 +178,8 @@ def _assemble_manifest(step: int, num_hosts: int, ctx: CommitContext,
         prev_step=ctx.prev_step, quant=ctx.quant, policy=ctx.policy,
         tables=merged["tables"], dense=merged["dense"], extra=ctx.extra,
         nbytes_total=merged["nbytes_total"], wall_time_s=0.0,
-        created_unix=max(p.created_unix for p in parts), shards=shards)
+        created_unix=max(p.created_unix for p in parts), shards=shards,
+        layout=mf.make_layout(num_hosts))
 
 
 def build_manifest(store: ObjectStore, step: int, num_hosts: int,

@@ -29,6 +29,32 @@ MANIFEST_PREFIX = "manifests/"
 PART_PREFIX = "parts/"
 CHUNK_PREFIX = "chunks/"
 
+# Version of the explicit layout record stamped into manifests (below).
+# Bump when the partitioning scheme itself changes shape; readers treat
+# unknown kinds as unplannable and fall back to whole-table bounds.
+LAYOUT_VERSION = 1
+
+
+def make_layout(num_hosts: int) -> dict:
+    """The explicit, versioned shard-layout record for a manifest: how the
+    writing job partitioned table rows across hosts. ``row-contiguous`` is
+    the only kind today (``row_shard_bounds`` balanced ranges); the record
+    exists so the range planner (``core/range_reader.py``) can reason
+    about a chain's layouts without sniffing the legacy ``shards`` map."""
+    return {"version": LAYOUT_VERSION, "kind": "row-contiguous",
+            "num_hosts": int(num_hosts)}
+
+
+def layout_of(manifest: "Manifest") -> dict:
+    """A manifest's layout record, normalized: the explicit record when
+    stamped (PR 9+), else version-0 derived from the legacy ``shards``
+    map (1 host when unsharded). Every reader goes through this so old
+    chains plan identically to new ones."""
+    if manifest.layout is not None:
+        return manifest.layout
+    n = (manifest.shards or {}).get("num_hosts") or 1
+    return {"version": 0, "kind": "row-contiguous", "num_hosts": int(n)}
+
 # Backstop for recovery-chain walks over damaged manifests: no sane policy
 # produces chains anywhere near this deep (consecutive policies re-baseline
 # far sooner), so hitting it means the prev/base links are garbage.
@@ -188,6 +214,9 @@ class Manifest:
     # "crc32", "nbytes"}, ...]} over the per-host part manifests merged into
     # ``tables``/``dense``. None for single-host checkpoints.
     shards: Optional[dict] = None
+    # Explicit versioned shard-layout record (:func:`make_layout`). Old
+    # manifests omit it; readers normalize through :func:`layout_of`.
+    layout: Optional[dict] = None
 
     def to_json(self) -> str:
         d = dict(
@@ -204,6 +233,7 @@ class Manifest:
             wall_time_s=self.wall_time_s,
             created_unix=self.created_unix,
             shards=self.shards,
+            layout=self.layout,
         )
         return json.dumps(d, indent=1, sort_keys=True)
 
@@ -225,6 +255,7 @@ class Manifest:
             wall_time_s=d.get("wall_time_s", 0.0),
             created_unix=d.get("created_unix", 0.0),
             shards=d.get("shards"),
+            layout=d.get("layout"),
         )
 
 

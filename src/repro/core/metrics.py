@@ -53,12 +53,19 @@ class ManagerMetrics:
     last_restore_step: Optional[int] = None
     # partial recovery (docs/partial_recovery.md): shard-only replays and
     # their full-restore fallbacks, counted by kind so dashboards can tell
-    # an O(shard) recovery from an O(model) one
+    # an O(shard) recovery from an O(model) one; ``resharded`` counts
+    # range reads that crossed a num_hosts change (docs/resharding.md) —
+    # mutually exclusive with ``partial``
     recoveries_partial_total: int = 0
     recoveries_full_total: int = 0
+    recoveries_resharded_total: int = 0
     recovery_rows_replayed_total: int = 0
     last_recovery_wall_s: Optional[float] = None
     last_recovery_host: Optional[int] = None
+    # source → target host counts of the most recent shard recovery, so
+    # elastic events (N±k restarts) are visible on dashboards
+    last_recovery_source_hosts: Optional[int] = None
+    last_recovery_target_hosts: Optional[int] = None
     # GC / retention
     retention_steps_deleted_total: int = 0
     gc_steps_reclaimed_total: int = 0
@@ -102,8 +109,12 @@ _HELP = {
     "corruption_errors_total":
         "Chunk integrity failures observed during decode.",
     "recoveries_total":
-        "Host-loss recoveries by kind (partial shard replay vs full-restore "
-        "fallback).",
+        "Host-loss recoveries by kind (partial shard replay, resharded "
+        "range read across a layout change, or full-restore fallback).",
+    "last_recovery_source_hosts":
+        "Source layout host count of the most recent shard recovery.",
+    "last_recovery_target_hosts":
+        "Target layout host count of the most recent shard recovery.",
     "recovery_rows_replayed_total":
         "Embedding rows replayed by partial (shard-only) recoveries.",
     "last_recovery_wall_s": "Wall seconds of the most recent recovery.",
@@ -169,6 +180,8 @@ def render_prometheus(values: dict, prefix: str = PROM_PREFIX) -> str:
              {"kind": "partial"}, "counter")
         emit("recoveries_total", values.get("recoveries_full_total"),
              {"kind": "full"}, "counter")
+        emit("recoveries_total", values.get("recoveries_resharded_total"),
+             {"kind": "resharded"}, "counter")
     for name in ("save_bytes_total", "restores_total", "restore_bytes_total",
                  "restore_fallbacks_total", "corruption_errors_total",
                  "recovery_rows_replayed_total",
@@ -178,7 +191,9 @@ def render_prometheus(values: dict, prefix: str = PROM_PREFIX) -> str:
             emit(name, values[name], mtype="counter")
     for name in ("last_success_step", "last_success_age_s",
                  "last_restore_step", "last_recovery_wall_s",
-                 "last_recovery_host", "steps_committed", "steps_aborted",
+                 "last_recovery_host", "last_recovery_source_hosts",
+                 "last_recovery_target_hosts",
+                 "steps_committed", "steps_aborted",
                  "steps_quarantined", "latest_step", "latest_step_age_s",
                  "latest_step_nbytes"):
         if name in values:

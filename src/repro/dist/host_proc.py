@@ -170,6 +170,24 @@ def load_config(spill_dir: str):
     return CheckpointConfig(quant=QuantConfig(**q) if q else None, **d)
 
 
+def rewrite_spill_layout(spill_dir: str, num_hosts: int) -> None:
+    """Re-key a spill to a new host count (elastic respawn —
+    ``RecoverySupervisor.respawn_resharded``). The snapshot arrays are
+    full tables and layout-independent (each host mmap-slices only its
+    own writer shard), so only the two records that name the layout —
+    the manager config and the shared commit context's quorum size —
+    need rewriting. Must happen before any new-layout host launches."""
+    for fn in (SPILL_CONFIG, SPILL_COMMIT):
+        path = os.path.join(spill_dir, fn)
+        with open(path) as f:
+            d = json.load(f)
+        d["num_hosts"] = int(num_hosts)
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(d, f)
+        os.replace(tmp, path)
+
+
 # ------------------------------------------------------------ process launch
 def child_env() -> Dict[str, str]:
     """Environment for a host process: ensures the running ``repro`` tree

@@ -44,6 +44,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from ..core import manifest as mf
+from ..core import range_reader as rr
 from ..core.checkpoint import CheckNRunManager, PartialRecoveryError, RestoredState
 from ..core.storage import ObjectStore
 
@@ -220,21 +221,32 @@ class RecoverySupervisor:
     def fence(self, host: int) -> int:
         return fence_host(self.store, host)
 
+    def fence_layout(self, num_hosts: int) -> List[int]:
+        """Fence EVERY host index up to ``num_hosts`` (when resharding,
+        pass ``max(old, new)`` — zombies from the previous layout must not
+        keep writing under the new one). Returns the new epochs."""
+        return [self.fence(h) for h in range(num_hosts)]
+
     # ------------------------------------------------------------- recovery
     def recover(self, manager: CheckNRunManager, host: int, *,
-                step: Optional[int] = None) -> RestoredState:
+                step: Optional[int] = None,
+                num_hosts: Optional[int] = None) -> RestoredState:
         """Fence ``host`` and recover its shard from the committed chain.
         Partial (O(shard)) when the shard chain is intact; on
         :class:`PartialRecoveryError` falls back to a full O(model)
         ``restore(on_corruption="fallback")`` — recovery must degrade, not
-        fail. ``extra["recovery"]`` records kind, the condemned host, the
-        fence epoch, bytes fetched and wall seconds."""
+        fail. ``num_hosts`` recovers onto a NEW layout (the host's shard
+        under ``num_hosts`` hosts, regardless of how the chain was
+        written — docs/resharding.md); kind is then ``resharded``.
+        ``extra["recovery"]`` records kind, the condemned host, the fence
+        epoch, source/target layouts, bytes fetched and wall seconds."""
         t0 = time.monotonic()
         before = self.store.counters.snapshot()["bytes_read"]
         epoch = self.fence(host)
         try:
-            rs = manager.restore_part(host, step)
-            kind = "partial"
+            rs = manager.restore_part(host, step, num_hosts=num_hosts)
+            shard = rs.extra.get("shard", {})
+            kind = "resharded" if shard.get("resharded") else "partial"
         except PartialRecoveryError as e:
             rs = manager.restore(step, on_corruption="fallback")
             kind = "full"
@@ -244,10 +256,15 @@ class RecoverySupervisor:
             rs.extra = dict(rs.extra)
             rs.extra["recovery_fallback_reason"] = f"{e.kind}: {e.detail}"
         rs.extra = dict(rs.extra)
-        rs.extra["recovery"] = {
+        info = {
             "kind": kind, "host": host, "fence_epoch": epoch,
             "bytes_read": self.store.counters.snapshot()["bytes_read"] - before,
             "wall_s": time.monotonic() - t0}
+        if kind != "full":
+            shard = rs.extra.get("shard", {})
+            info["source_hosts"] = shard.get("source_num_hosts")
+            info["target_hosts"] = shard.get("num_hosts")
+        rs.extra["recovery"] = info
         return rs
 
     # -------------------------------------------------------------- respawn
@@ -280,20 +297,82 @@ class RecoverySupervisor:
             if log_path:
                 log.close()
 
+    def respawn_resharded(self, store_arg: str, spill_dir: str,
+                          new_num_hosts: int, *,
+                          heartbeat_s: Optional[float] = None,
+                          poll_interval_s: float = 0.02,
+                          commit_timeout_s: float = 120.0,
+                          log_dir: Optional[str] = None,
+                          **host_kwargs) -> Dict[int, subprocess.Popen]:
+        """Relaunch the WHOLE job at a new host count against the same
+        spill (docs/resharding.md): the spill's full-table arrays are
+        layout-independent (each host mmaps only its shard's rows), so an
+        aborted N-host save completes as an N±k-host save. Steps taken,
+        in order:
 
-def shard_nbytes(store: ObjectStore, host: int, step: int) -> int:
+        1. refuse if the spill's step already committed — nothing to
+           complete; a fresh run should ``restore_part(..., num_hosts=)``
+           under the new layout instead;
+        2. fence every host of BOTH layouts (``max(old, new)``): zombies
+           from the old incarnation must not write or vote under the new
+           one;
+        3. purge the aborted attempt's durable votes — an old-layout part
+           manifest would otherwise count toward the new quorum with
+           wrong-shard contents (old CHUNK debris is harmless: it is
+           either overwritten key-for-key or left unreferenced by the
+           committed manifest);
+        4. rewrite the spill's recorded layout and launch all
+           ``new_num_hosts`` replacements, each heartbeating at its
+           post-fence epoch.
+        """
+        from . import host_proc
+
+        step, old_n, _, _ = host_proc.load_commit(spill_dir)
+        if self.store.exists(mf.manifest_key(step)):
+            raise RuntimeError(
+                f"step {step} is already committed; reshard by restoring "
+                f"under the new layout (restore_part(..., num_hosts=)) "
+                f"instead of respawning the save")
+        self.fence_layout(max(old_n, new_num_hosts))
+        for key in list(self.store.list(mf.part_prefix(step))):
+            self.store.delete(key)
+        host_proc.rewrite_spill_layout(spill_dir, new_num_hosts)
+        self.num_hosts = new_num_hosts
+        procs: Dict[int, subprocess.Popen] = {}
+        for h in range(new_num_hosts):
+            cmd = host_proc.host_command(
+                store_arg, spill_dir, h,
+                heartbeat_s=heartbeat_s,
+                heartbeat_epoch=read_fence(self.store, h),
+                poll_interval_s=poll_interval_s,
+                commit_timeout_s=commit_timeout_s,
+                **host_kwargs)
+            log_path = (os.path.join(log_dir, f"host_{h}.log")
+                        if log_dir else None)
+            log = open(log_path, "wb") if log_path else subprocess.DEVNULL
+            try:
+                procs[h] = subprocess.Popen(cmd, env=host_proc.child_env(),
+                                            stdout=log,
+                                            stderr=subprocess.STDOUT)
+            finally:
+                if log_path:
+                    log.close()
+        return procs
+
+
+def shard_nbytes(store: ObjectStore, host: int, step: int,
+                 num_hosts: Optional[int] = None) -> int:
     """Total payload bytes a partial recovery of ``host`` at ``step``
-    should fetch: the host's part bytes over the whole recovery chain plus
-    the final step's (global) dense blobs — the yardstick for the
-    "recovery bytes ≈ shard size" acceptance bound."""
+    should fetch: the range plan for the host's target shard over the
+    whole recovery chain plus the final step's (global) dense blobs — the
+    yardstick for the "recovery bytes ≈ shard size" acceptance bound.
+
+    The target layout comes from the manifest's recorded layout (NOT from
+    caller config — a drill must report honest bytes after a
+    ``num_hosts`` change); pass ``num_hosts`` to cost a resharded read
+    onto a different layout."""
     chain = mf.recovery_chain(store, step)
-    total = 0
-    for man in chain:
-        try:
-            total += mf.load_part(store, man.step, host).nbytes_total
-        except (KeyError, FileNotFoundError):
-            prefix = mf.chunk_host_prefix(man.step, host)
-            total += sum(ch.nbytes for rec in man.tables.values()
-                         for ch in rec.chunks if ch.key.startswith(prefix))
-    total += sum(d.nbytes for d in chain[-1].dense.values())
-    return total
+    final = chain[-1]
+    tgt = num_hosts if num_hosts is not None else rr.layout_num_hosts(final)
+    targets = rr.shard_targets(final.tables, host, tgt)
+    return rr.plan_ranges(chain, targets).nbytes

@@ -81,23 +81,10 @@ class ShardingRules:
 NO_SHARDING = ShardingRules(mesh=None, axis_map={})
 
 
-def row_shard_bounds(rows: int, num_hosts: int):
-    """Contiguous row ranges ``[(lo, hi), ...]`` assigning a table's rows to
-    ``num_hosts`` hosts — the host-level analogue of range-partitioning
-    "embed_rows" over the mesh. Balanced to within one row (the first
-    ``rows % num_hosts`` hosts take the extra), covers every row exactly
-    once, and degrades to empty ranges when ``rows < num_hosts`` so tiny
-    tables stay valid on any host count."""
-    if num_hosts <= 0:
-        raise ValueError(f"num_hosts must be positive, got {num_hosts}")
-    base, extra = divmod(max(rows, 0), num_hosts)
-    bounds = []
-    lo = 0
-    for h in range(num_hosts):
-        hi = lo + base + (1 if h < extra else 0)
-        bounds.append((lo, hi))
-        lo = hi
-    return bounds
+# Canonical in core/range_reader.py — the read-side planner inverts this
+# layout math, and core must not import dist (jax at import time). The
+# write side keeps its historical import path via this re-export.
+from ..core.range_reader import row_shard_bounds  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------

@@ -87,16 +87,21 @@ def main(argv=None):
     ap.add_argument("cmd", choices=["list", "show", "verify", "scan",
                                     "validate", "quarantine", "resume",
                                     "emit-metrics", "gc", "gc-aborted",
-                                    "commit", "recover"])
+                                    "commit", "recover", "reshard"])
     ap.add_argument("--dir", required=True,
                     help="LocalFSStore root path or remote store URI "
                          "(http://host:port)")
     ap.add_argument("--step", type=int, default=None)
     ap.add_argument("--keep", type=int, default=1)
     ap.add_argument("--num-hosts", type=int, default=None,
-                    help="commit: expected quorum size")
+                    help="commit: expected quorum size; recover/reshard: "
+                         "TARGET layout host count — may differ from the "
+                         "layout the chain was written under "
+                         "(docs/resharding.md)")
     ap.add_argument("--host", type=int, default=None,
-                    help="recover: host index whose shard chain to replay")
+                    help="recover: host index whose shard to replay; "
+                         "reshard: additionally drill this target host's "
+                         "range read")
     ap.add_argument("--fence", action="store_true",
                     help="recover: bump the host's fence epoch first so a "
                          "zombie writer at the old epoch exits on its next "
@@ -323,8 +328,10 @@ def main(argv=None):
         t0 = time.monotonic()
         try:
             try:
-                rs = mgr.restore_part(args.host, s)
-                kind = "partial"
+                rs = mgr.restore_part(args.host, s,
+                                      num_hosts=args.num_hosts)
+                kind = ("resharded"
+                        if rs.extra["shard"].get("resharded") else "partial")
             except PartialRecoveryError as e:
                 print(f"partial recovery unavailable ({e.kind}): {e.detail}")
                 print("falling back to full restore")
@@ -343,14 +350,71 @@ def main(argv=None):
               f"(chain of {rs.chain_len}): {rows:,} rows across "
               f"{len(rs.tables)} tables, {nbytes:,} bytes fetched "
               f"in {wall:.2f}s")
-        if kind == "partial":
-            for name, rng in sorted(
-                    rs.extra["shard"]["row_range"].items()):
+        if kind != "full":
+            shard = rs.extra["shard"]
+            if kind == "resharded":
+                hist = ", ".join(str(n) for n in shard.get(
+                    "source_layouts", [shard["source_num_hosts"]]))
+                print(f"  resharded read: chain layout(s) [{hist}] -> "
+                      f"target {shard['num_hosts']} host(s)")
+            for name, rng in sorted(shard["row_range"].items()):
                 print(f"  table {name}: rows [{rng[0]}, {rng[1]})")
         if rs.degraded_from is not None:
             print(f"DEGRADED: step {rs.degraded_from} was unrestorable; "
                   f"recovered from older step {rs.step} — the gap is lost "
                   f"training to redo")
+        return 0
+
+    if args.cmd == "reshard":
+        # plan (and with --host, drill) a layout change: for each host of
+        # the TARGET layout, the row ranges it would own and the bytes a
+        # range-read restore fetches for them — O(target shard), however
+        # the chain was written (docs/resharding.md)
+        if args.num_hosts is None:
+            print("reshard requires --num-hosts (the target layout)")
+            return 2
+        from ..core import CheckNRunManager, CheckpointConfig
+        from ..core import range_reader as rr
+        from ..dist import recovery as rcv
+
+        s = args.step if args.step is not None else mf.latest_step(store)
+        if s is None:
+            print("no valid checkpoints")
+            return 1
+        chain = mf.recovery_chain(store, s)
+        final = chain[-1]
+        hist = " -> ".join(f"step {m.step}: {rr.layout_num_hosts(m)}h"
+                           for m in chain)
+        print(f"layout history: {hist}")
+        print(f"reshard plan: {rr.layout_num_hosts(final)} -> "
+              f"{args.num_hosts} host(s) at step {s}")
+        total = 0
+        for h in range(args.num_hosts):
+            targets = rr.shard_targets(final.tables, h, args.num_hosts)
+            rows = sum(hi - lo for lo, hi in targets.values())
+            nb = rcv.shard_nbytes(store, h, s, num_hosts=args.num_hosts)
+            total += nb
+            print(f"  host {h:>3}: {rows:,} rows, {nb:,} planned bytes")
+        full_bytes = sum(m.nbytes_total for m in chain)
+        print(f"total planned: {total:,} bytes "
+              f"(full chain: {full_bytes:,})")
+        if args.host is None:
+            return 0
+        # drill: actually perform one target host's range read
+        mgr = CheckNRunManager(store, CheckpointConfig(async_write=False))
+        before = store.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+        try:
+            rs = mgr.restore_part(args.host, s, num_hosts=args.num_hosts)
+        finally:
+            mgr.close()
+        nbytes = store.counters.snapshot()["bytes_read"] - before
+        rows = sum(t.shape[0] for t in rs.tables.values())
+        print(f"drilled host {args.host} of {args.num_hosts}: {rows:,} "
+              f"rows, {nbytes:,} bytes fetched in "
+              f"{time.monotonic() - t0:.2f}s")
+        for name, rng in sorted(rs.extra["shard"]["row_range"].items()):
+            print(f"  table {name}: rows [{rng[0]}, {rng[1]})")
         return 0
 
     steps = mf.list_steps(store)
@@ -409,6 +473,15 @@ def main(argv=None):
                       f"in {len(chunks)} chunks{note}")
         chain = mf.recovery_chain(store, s)
         print(f"recovery chain: {[c.step for c in chain]}")
+        from ..core import range_reader as rr
+        layouts = [rr.layout_num_hosts(c) for c in chain]
+        if len(set(layouts)) > 1:
+            hist = " -> ".join(f"step {c.step}: {n}h"
+                               for c, n in zip(chain, layouts))
+            print(f"layout history: {hist}  (RESHARDED chain — "
+                  f"restore_part range-reads across the change)")
+        else:
+            print(f"layout: {layouts[-1]} host(s) across the chain")
         for name, rec in m.tables.items():
             rows_stored = sum(c.n_rows for c in rec.chunks)
             print(f"  table {name}: {rec.rows}×{rec.dim} "

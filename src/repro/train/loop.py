@@ -185,7 +185,8 @@ class Trainer:
 
     def recover_host(self, host: int, mode: str = "exact",
                      step: Optional[int] = None,
-                     supervisor=None) -> int:
+                     supervisor=None,
+                     num_hosts: Optional[int] = None) -> int:
         """Recover from the loss of ONE host's shard without restarting the
         survivors (docs/partial_recovery.md). Replays only that host's
         shard chain from the committed checkpoint, splices it into a
@@ -209,19 +210,29 @@ class Trainer:
         ``restore()`` (kind == "full" in ``last_recovery``) — everything
         rolls back and the degradation is stamped into the next save's
         manifest as ``degraded_from``.
+
+        ``num_hosts`` recovers the host's shard under a NEW layout
+        (docs/resharding.md): a trainer restarted at N±k hosts — whose
+        own ``ckpt_cfg.num_hosts`` already names the new layout — can
+        default it, since the range planner reads the chain regardless of
+        the layout it was written under; pass it explicitly to recover a
+        shard of a layout differing from the trainer's config.
         """
         from ..core import manifest as mf
         from ..dist.recovery import RecoverySupervisor
 
         if mode not in ("exact", "cpr"):
             raise ValueError(f"unknown staleness mode {mode!r}")
-        sup = supervisor or RecoverySupervisor(self.manager.store,
-                                               self.ckpt_cfg.num_hosts)
+        tgt = num_hosts if num_hosts is not None \
+            else (self.ckpt_cfg.num_hosts
+                  if self.ckpt_cfg.num_hosts > 1 else None)
+        sup = supervisor or RecoverySupervisor(
+            self.manager.store, tgt or self.ckpt_cfg.num_hosts)
         committed = step if step is not None \
             else mf.latest_step(self.manager.store)
         if committed is None:
             raise FileNotFoundError("no committed checkpoint to recover from")
-        rs = sup.recover(self.manager, host, step=committed)
+        rs = sup.recover(self.manager, host, step=committed, num_hosts=tgt)
         info = dict(rs.extra.get("recovery", {}))
         info["mode"] = mode
         template = self.bundle.make_state()

@@ -221,10 +221,11 @@ def splice_shard_state(state: TrainState, restored,
     the last committed values, so a since-last-commit touched claim for
     them is stale (the manager-side mask twin is
     ``CheckNRunManager.refence_shard``). For coarse-tracked specs
-    (``expansion > 1``) any unit OVERLAPPING the range is cleared — the
-    range is always unit-aligned for shard recoveries (row_shard_bounds
-    splits the same 2-D view the expansion maps to), so no partial unit
-    loses a legitimate claim.
+    (``expansion > 1``) only units FULLY COVERED by the range are
+    cleared: a resharded recovery's ranges need not be unit-aligned, and
+    a partial unit still carries live rows whose touched claim must
+    survive (re-storing an already-committed row is merely redundant;
+    losing a legitimate claim would drop data from the next increment).
     """
     shard = (restored.extra or {}).get("shard") or {}
     ranges = shard.get("row_range") or {}
@@ -250,9 +251,10 @@ def splice_shard_state(state: TrainState, restored,
             flat_o = flat_o.at[lo:hi].set(
                 jnp.asarray(aux["opt_acc2d"], dtype=opt_leaf.dtype))
             opt = tree_set(opt, spec.path, flat_o.reshape(opt_leaf.shape))
-        ulo = lo // spec.expansion
-        uhi = -(-hi // spec.expansion)  # ceil — clear any overlapping unit
-        touched[name] = touched[name].at[ulo:uhi].set(False)
+        ulo = -(-lo // spec.expansion)  # ceil — first fully-covered unit
+        uhi = hi // spec.expansion      # floor — one past the last
+        if ulo < uhi:
+            touched[name] = touched[name].at[ulo:uhi].set(False)
     return TrainState(step=state.step, params=params, opt_state=opt,
                       touched=touched, rng=state.rng)
 

@@ -86,9 +86,12 @@ def test_partial_recovery_error_taxonomy(tiny_snapshot):
     mgr2.close()
 
 
-def test_restore_part_layout_mismatch_across_chain(tiny_snapshot):
+def test_restore_part_across_layout_change_in_chain(tiny_snapshot):
     """An incremental whose base was written with a DIFFERENT num_hosts
-    has different row ranges per host — restore_part must refuse."""
+    (4-host full + 2-host increment) range-reads cleanly: the planner
+    resolves each target shard across the union of source shards, and the
+    result is byte-identical to the full restore's slice. This chain used
+    to be a typed ``layout-mismatch`` refusal (docs/resharding.md)."""
     store = InMemoryStore()
     m4 = CheckNRunManager(store, make_cfg(policy="one_shot"))
     snap = tiny_snapshot(step=1)
@@ -102,9 +105,16 @@ def test_restore_part_layout_mismatch_across_chain(tiny_snapshot):
     snap2 = dataclasses.replace(touch(snap, np.random.default_rng(1)), step=2)
     m2.save(snap2).result()
     assert mf.load(store, 2).kind == "incremental"
-    with pytest.raises(PartialRecoveryError) as ei:
-        m2.restore_part(0, 2)
-    assert ei.value.kind == "layout-mismatch"
+    ref = m2.restore(2)
+    for host in range(2):
+        rs = m2.restore_part(host, 2)
+        assert rs.extra["shard"]["resharded"] is True
+        assert rs.extra["shard"]["num_hosts"] == 2
+        shard_slice_equal(rs, ref.tables, ref.row_state)
+    met = m2.metrics()
+    assert met.recoveries_resharded_total == 2
+    assert met.recoveries_partial_total == 0
+    assert met.last_recovery_target_hosts == 2
     m2.close()
 
 

@@ -1,0 +1,486 @@
+"""Elastic resharding: layout-independent restore across a num_hosts change
+(docs/resharding.md).
+
+Properties under test, from the planner up to a real-process elastic drill:
+
+* a target shard under ANY ``num_hosts`` range-reads from a chain written
+  under a different layout, byte-identical to the full restore's slice,
+  and the target shards stitch back into the exact full state;
+* per-target-host bytes stay O(target shard) — bounded by the range
+  plan's own cost estimate (``shard_nbytes(..., num_hosts=)``), not
+  O(model);
+* legacy manifests (no ``layout`` record, ``hash32: null``) flow through
+  the same planner via the version-0 derived layout (satellite);
+* a truly lost source shard still surfaces as a typed ``missing-part``
+  — resharding must not paper over missing records;
+* manifests record an explicit versioned layout; the CLI plans/drills
+  reshards and surfaces layout history; metrics count ``resharded``
+  recoveries with source→target host gauges;
+* the trainer recovers a shard straight into a NEW layout (in-process);
+* the elastic drill: SIGKILL an N-host save mid-protocol, then complete
+  the SAME spilled step as an M-host save via ``respawn_resharded``
+  (grow 2→4 and shrink 4→2), committing a manifest byte-restorable under
+  the new layout.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckNRunManager,
+    InMemoryStore,
+    LocalFSStore,
+    PartialRecoveryError,
+)
+from repro.core import manifest as mf
+from repro.core import range_reader as rr
+from repro.dist import recovery
+from tests.fault_injection import assert_no_torn_manifests
+from tests.test_multiprocess_commit import make_cfg, touch
+from tests.test_partial_recovery import (
+    META_SLACK,
+    _bundle,
+    shard_slice_equal,
+)
+
+
+def stitch(store_mgr, step, num_hosts):
+    """Restore every target shard under ``num_hosts`` and stitch the
+    slices back into full per-table arrays, asserting the shard row
+    ranges exactly partition each table."""
+    parts = [store_mgr.restore_part(h, step, num_hosts=num_hosts)
+             for h in range(num_hosts)]
+    tables, row_state = {}, {}
+    for name, rec in mf.load(store_mgr.store, step).tables.items():
+        spans = sorted((p.extra["shard"]["row_range"][name], i)
+                       for i, p in enumerate(parts))
+        cursor = 0
+        tabs, accs = [], {}
+        for (lo, hi), i in spans:
+            assert lo == cursor, f"{name}: gap/overlap at {lo} != {cursor}"
+            cursor = hi
+            tabs.append(parts[i].tables[name])
+            for aux, v in parts[i].row_state.get(name, {}).items():
+                accs.setdefault(aux, []).append(v)
+        assert cursor == rec.rows, f"{name}: shards cover {cursor}/{rec.rows}"
+        tables[name] = np.concatenate(tabs, axis=0)
+        row_state[name] = {a: np.concatenate(vs) for a, vs in accs.items()}
+    return parts, tables, row_state
+
+
+# --------------------------------------------------------------------------
+# acceptance: N→N±k byte-identity + O(target shard) bytes
+# --------------------------------------------------------------------------
+
+
+def test_reshard_grow_2_to_3_stitches_byte_identical(tiny_snapshot):
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg(num_hosts=2))
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+
+    parts, tables, row_state = stitch(mgr, 1, 3)
+    for p in parts:
+        assert p.extra["shard"]["resharded"] is True
+        assert p.extra["shard"]["source_num_hosts"] == 2
+        assert p.extra["shard"]["num_hosts"] == 3
+    for name, tab in snap.tables.items():
+        np.testing.assert_array_equal(tables[name], tab, err_msg=name)
+        np.testing.assert_array_equal(row_state[name]["acc"],
+                                      snap.row_state[name]["acc"],
+                                      err_msg=name)
+    met = mgr.metrics()
+    assert met.recoveries_resharded_total == 3
+    assert met.recoveries_partial_total == 0
+    assert met.last_recovery_source_hosts == 2
+    assert met.last_recovery_target_hosts == 3
+    mgr.close()
+
+
+def test_reshard_shrink_4_to_2_over_incremental_chain(tiny_snapshot):
+    """Shrink across a full+incremental chain: each 2-host target shard is
+    the full restore's slice, fetched in O(target shard) bytes per the
+    plan's own estimate."""
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg(policy="one_shot"))
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+    snap2 = dataclasses.replace(touch(snap, np.random.default_rng(11)),
+                                step=2)
+    mgr.save(snap2).result()
+    assert mf.load(store, 2).kind == "incremental"
+    ref = mgr.restore(2)
+
+    for host in range(2):
+        before = store.counters.snapshot()["bytes_read"]
+        rs = mgr.restore_part(host, 2, num_hosts=2)
+        nbytes = store.counters.snapshot()["bytes_read"] - before
+        assert rs.extra["shard"]["resharded"] is True
+        shard_slice_equal(rs, ref.tables, ref.row_state)
+        budget = recovery.shard_nbytes(store, host, 2, num_hosts=2)
+        assert nbytes <= budget + META_SLACK
+    mgr.close()
+
+
+def test_reshard_bytes_o_target_shard_not_o_model(tiny_snapshot):
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg())
+    snap = tiny_snapshot(step=1, rows=2000, tables=3)
+    mgr.save(snap).result()
+
+    host, tgt = 1, 3
+    before = store.counters.snapshot()["bytes_read"]
+    rs = mgr.restore_part(host, num_hosts=tgt)
+    part_bytes = store.counters.snapshot()["bytes_read"] - before
+    shard_slice_equal(rs, snap.tables, snap.row_state)
+
+    before = store.counters.snapshot()["bytes_read"]
+    mgr.restore()
+    full_bytes = store.counters.snapshot()["bytes_read"] - before
+
+    assert part_bytes <= recovery.shard_nbytes(store, host, 1,
+                                               num_hosts=tgt) + META_SLACK
+    assert part_bytes < 0.5 * full_bytes  # ≈ 1/3 of tables + dense
+    mgr.close()
+
+
+# --------------------------------------------------------------------------
+# satellite: legacy manifests through the range planner
+# --------------------------------------------------------------------------
+
+
+def test_reshard_legacy_manifest_no_layout_null_hash32(tiny_snapshot):
+    """A pre-layout-record, pre-chunk-hash manifest (no ``layout`` key, no
+    ``shards`` map, ``hash32: null``) still range-reads: the version-0
+    derived layout names it single-host, and verification falls back to
+    size+crc. Splitting it 1→2 stitches byte-identically."""
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg(num_hosts=1, chunk_hash=False))
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+
+    # strip the modern layout record to simulate a legacy manifest
+    d = json.loads(store.get(mf.manifest_key(1)).decode())
+    assert d.pop("layout") is not None
+    store.put(mf.manifest_key(1), json.dumps(d).encode())
+    man = mf.load(store, 1)
+    assert man.layout is None
+    assert man.shards is None
+    assert all(ch.hash32 is None
+               for rec in man.tables.values() for ch in rec.chunks)
+    assert mf.layout_of(man) == {"version": 0, "kind": "row-contiguous",
+                                 "num_hosts": 1}
+
+    # the single-host layout itself restores byte-identically...
+    full = mgr.restore(1)
+    for name, tab in snap.tables.items():
+        np.testing.assert_array_equal(full.tables[name], tab, err_msg=name)
+    # ...and the explicit num_hosts= escape range-reads it as 2 shards
+    parts, tables, row_state = stitch(mgr, 1, 2)
+    for p in parts:
+        assert p.extra["shard"]["resharded"] is True
+        assert p.extra["shard"]["source_num_hosts"] == 1
+    for name, tab in snap.tables.items():
+        np.testing.assert_array_equal(tables[name], tab, err_msg=name)
+        np.testing.assert_array_equal(row_state[name]["acc"],
+                                      snap.row_state[name]["acc"],
+                                      err_msg=name)
+    mgr.close()
+
+
+def test_manifest_records_versioned_layout(tiny_snapshot):
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg())
+    mgr.save(tiny_snapshot(step=1)).result()
+    man = mf.load(store, 1)
+    assert man.layout == {"version": mf.LAYOUT_VERSION,
+                          "kind": "row-contiguous", "num_hosts": 4}
+    assert mf.layout_of(man) is man.layout
+    assert rr.layout_num_hosts(man) == 4
+    mgr.close()
+
+    s1 = InMemoryStore()
+    m1 = CheckNRunManager(s1, make_cfg(num_hosts=1))
+    m1.save(tiny_snapshot(step=1)).result()
+    assert rr.layout_num_hosts(mf.load(s1, 1)) == 1
+    m1.close()
+
+
+# --------------------------------------------------------------------------
+# a lost source shard must NOT be papered over by resharding
+# --------------------------------------------------------------------------
+
+
+def test_reshard_missing_source_records_typed_missing_part(tiny_snapshot):
+    """Strip source host 2's chunk records from the global manifest and
+    reclaim its part manifest: the target shard that needs those rows gets
+    a typed ``missing-part`` (the witness check), while a target shard
+    that does not intersect the lost source range still restores."""
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg())
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+
+    lost = 2
+    man = mf.load(store, 1)
+    prefix = mf.chunk_host_prefix(1, lost)
+    man.tables = {
+        name: dataclasses.replace(rec, chunks=[
+            ch for ch in rec.chunks if not ch.key.startswith(prefix)])
+        for name, rec in man.tables.items()}
+    store.put(mf.manifest_key(1), man.to_json().encode())
+    store.delete(mf.part_key(1, lost))
+
+    # source host 2 of 4 owns rows ~[rows/2, 3*rows/4) — inside 2-host
+    # target shard 1 and disjoint from target shard 0
+    rs = mgr.restore_part(0, 1, num_hosts=2)
+    shard_slice_equal(rs, snap.tables, snap.row_state)
+    with pytest.raises(PartialRecoveryError) as ei:
+        mgr.restore_part(1, 1, num_hosts=2)
+    assert ei.value.kind == "missing-part"
+    mgr.close()
+
+
+# --------------------------------------------------------------------------
+# metrics + CLI surfaces
+# --------------------------------------------------------------------------
+
+
+def test_prometheus_resharded_kind_and_layout_gauges(tiny_snapshot):
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, make_cfg())
+    mgr.save(tiny_snapshot(step=1)).result()
+    mgr.restore_part(0, num_hosts=2)
+    text = mgr.metrics().to_prometheus()
+    assert 'recoveries_total{kind="resharded"} 1' in text
+    assert 'recoveries_total{kind="partial"} 0' in text
+    assert "last_recovery_source_hosts 4" in text
+    assert "last_recovery_target_hosts 2" in text
+    mgr.close()
+
+
+def test_ckpt_reshard_cli_plan_and_drill(tmp_path, tiny_snapshot, capsys):
+    from repro.launch.ckpt import main as ckpt_main
+
+    root = str(tmp_path / "store")
+    store = LocalFSStore(root)
+    mgr = CheckNRunManager(store, make_cfg())
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+    mgr.close()
+
+    assert ckpt_main(["reshard", "--dir", root]) == 2  # target required
+    capsys.readouterr()
+
+    assert ckpt_main(["reshard", "--dir", root, "--num-hosts", "2",
+                      "--host", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "layout history: step 1: 4h" in out
+    assert "reshard plan: 4 -> 2 host(s) at step 1" in out
+    assert "total planned:" in out
+    assert "drilled host 0 of 2:" in out
+    total_rows = sum(t.shape[0] for t in snap.tables.values())
+    planned = sum(
+        int(line.split(":")[1].strip().split(" ")[0].replace(",", ""))
+        for line in out.splitlines()
+        if line.strip().startswith("host "))
+    assert planned == total_rows  # target shards partition the tables
+
+
+def test_ckpt_recover_cli_resharded_and_show_history(tmp_path, tiny_snapshot,
+                                                     capsys):
+    from repro.launch.ckpt import main as ckpt_main
+
+    root = str(tmp_path / "store")
+    store = LocalFSStore(root)
+    m4 = CheckNRunManager(store, make_cfg(policy="one_shot"))
+    snap = tiny_snapshot(step=1)
+    m4.save(snap).result()
+    m4.close()
+    m2 = CheckNRunManager(store, make_cfg(policy="one_shot", num_hosts=2))
+    m2.restore()
+    m2.policy.state.baseline_step = 1
+    snap2 = dataclasses.replace(touch(snap, np.random.default_rng(3)), step=2)
+    m2.save(snap2).result()
+    m2.close()
+
+    assert ckpt_main(["recover", "--dir", root, "--host", "1",
+                      "--num-hosts", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "recovered host 1 (resharded) at step 2" in out
+    assert "resharded read: chain layout(s) [4, 2] -> target 2 host(s)" in out
+
+    assert ckpt_main(["show", "--dir", root]) == 0
+    out = capsys.readouterr().out
+    assert "layout history: step 1: 4h -> step 2: 2h" in out
+    assert "RESHARDED chain" in out
+
+
+# --------------------------------------------------------------------------
+# trainer: recover a shard straight into a NEW layout (in-process)
+# --------------------------------------------------------------------------
+
+
+def _trainer_n(bundle, store, num_hosts):
+    from repro.core.checkpoint import CheckpointConfig
+    from repro.train.loop import Trainer, TrainerConfig
+
+    cfg = CheckpointConfig(interval_batches=3, policy="full_only",
+                           quant=None, async_write=False,
+                           num_hosts=num_hosts, chunk_rows=64,
+                           keep_latest=10)
+    return Trainer(bundle, store, cfg, TrainerConfig(total_steps=9))
+
+
+def test_trainer_recover_host_into_new_layout_inprocess():
+    """A job restarted at 3 hosts over a 2-host-written chain recovers one
+    shard under the NEW layout (kind=resharded), splices it into live
+    state without corrupting anything, and trains on."""
+    import jax
+
+    from repro.train.state import tree_get
+
+    bundle = _bundle()
+    store = InMemoryStore()
+    t2 = _trainer_n(bundle, store, 2)
+    t2.init_or_restore()
+    t2.run(6)                       # checkpoints at 3 and 6 under 2 hosts
+    t2.close()
+
+    t3 = _trainer_n(bundle, store, 3)
+    t3.init_or_restore()            # full restore reads across layouts
+
+    def table_views(state):
+        return {name: np.asarray(jax.device_get(
+                    tree_get(state.params, spec.path))).reshape(
+                        spec.rows, spec.dim).copy()
+                for name, spec in bundle.tracked.items()}
+
+    live = table_views(t3.state)
+    resumed = t3.recover_host(1, mode="cpr")
+    assert resumed == 6
+    assert t3.last_recovery["kind"] == "resharded"
+    assert t3.last_recovery["source_hosts"] == 2
+    assert t3.last_recovery["target_hosts"] == 3
+    # the splice wrote committed rows over live-at-committed rows — the
+    # state must be unchanged (identity splice), not corrupted
+    after = table_views(t3.state)
+    for name in live:
+        np.testing.assert_array_equal(after[name], live[name], err_msg=name)
+    final = t3.run(3)               # 6→9 under the new layout
+    assert int(jax.device_get(final.step)) == 9
+    assert mf.latest_step(store) == 9
+    assert rr.layout_num_hosts(mf.load(store, 9)) == 3
+    t3.close()
+
+
+def test_splice_shard_state_clears_only_fully_covered_units():
+    """Coarse-tracked specs (expansion > 1) with a non-unit-aligned
+    resharded range: only FULLY covered units lose their touched claim."""
+    import jax.numpy as jnp
+
+    from repro.train.state import TrackedSpec, TrainState, splice_shard_state
+
+    spec = TrackedSpec(path=("tables", "t"), units=4, rows=8, dim=2)
+    state = TrainState(
+        step=jnp.asarray(6, jnp.int32),
+        params={"tables": {"t": jnp.zeros((8, 2), jnp.float32)},
+                "dense": {}},
+        opt_state={},
+        touched={"t": jnp.ones((4,), bool)},
+        rng=jnp.zeros((2,), jnp.uint32))
+
+    class R:
+        tables = {"t": np.ones((5, 2), np.float32)}
+        row_state = {"t": {}}
+        extra = {"shard": {"row_range": {"t": [1, 6]}}}
+
+    out = splice_shard_state(state, R(), {"t": spec})
+    got = np.asarray(out.touched["t"])
+    # rows [1,6) cover units 1,2 fully ([2,4),[4,6)); units 0,3 partially
+    np.testing.assert_array_equal(got, [True, False, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(out.params["tables"]["t"])[1:6], np.ones((5, 2)))
+    np.testing.assert_array_equal(
+        np.asarray(out.params["tables"]["t"])[0], np.zeros(2))
+
+
+# --------------------------------------------------------------------------
+# the elastic drill: complete a SIGKILLed N-host save as an M-host save
+# --------------------------------------------------------------------------
+
+
+ELASTIC = [
+    ("before_vote", 0, 2, 4),    # grow 2→4
+    ("mid_chunks:0", 1, 4, 2),   # shrink 4→2
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fault,victim,old_n,new_n", ELASTIC)
+def test_elastic_drill_respawn_resharded(tmp_path, tiny_snapshot,
+                                         fault, victim, old_n, new_n):
+    """SIGKILL one of ``old_n`` real host processes mid-save (uncommitted
+    protocol points), then complete the SAME spilled step as a
+    ``new_n``-host save: ``respawn_resharded`` fences both layouts, purges
+    the old-layout votes, rewrites the spill layout, and the relaunched
+    fleet commits a manifest whose restore is byte-identical to the
+    snapshot — with per-host recovery bytes O(new target shard)."""
+    from tests.test_partial_recovery import COMMIT_TIMEOUT_S, _orchestrate_hb
+
+    root = str(tmp_path / "store")
+    store = LocalFSStore(root)
+    mgr = CheckNRunManager(store, make_cfg(num_hosts=old_n))
+    snap = tiny_snapshot(step=1)
+    mgr.save(snap).result()
+    mgr.close()
+
+    snap2 = dataclasses.replace(touch(snap, np.random.default_rng(9)), step=2)
+    codes, procs, spill = _orchestrate_hb(
+        root, tmp_path, snap2, 2, faults={victim: fault}, heartbeat_s=0.1,
+        num_hosts=old_n)
+    assert codes[victim] == -9
+    assert not store.exists(mf.manifest_key(2))   # save aborted
+    assert_no_torn_manifests(store)
+
+    sup = recovery.RecoverySupervisor(store, old_n)
+    relaunched = sup.respawn_resharded(
+        root, spill, new_n, heartbeat_s=0.1,
+        commit_timeout_s=COMMIT_TIMEOUT_S, log_dir=str(tmp_path))
+    assert sorted(relaunched) == list(range(new_n))
+    assert all(p.wait(timeout=120) == 0 for p in relaunched.values())
+
+    assert mf.latest_step(store) == 2
+    assert_no_torn_manifests(store)
+    man = mf.load(store, 2)
+    assert rr.layout_num_hosts(man) == new_n
+    assert (man.shards or {}).get("num_hosts") == new_n
+
+    # every host of BOTH layouts was fenced against zombies
+    for h in range(max(old_n, new_n)):
+        assert recovery.read_fence(store, h) >= 1
+
+    # the committed step restores byte-identically to the snapshot, and
+    # each new-layout shard reads O(its own target shard)
+    probe = CheckNRunManager(store, make_cfg(num_hosts=new_n))
+    full = probe.restore(2)
+    for name, tab in snap2.tables.items():
+        np.testing.assert_array_equal(full.tables[name], tab, err_msg=name)
+    for h in range(new_n):
+        before = store.counters.snapshot()["bytes_read"]
+        rs = probe.restore_part(h, 2)
+        nbytes = store.counters.snapshot()["bytes_read"] - before
+        shard_slice_equal(rs, snap2.tables, snap2.row_state)
+        assert nbytes <= recovery.shard_nbytes(store, h, 2) + META_SLACK
+    probe.close()
+
+    # a completed save committed under ONE layout is a plain (partial, not
+    # resharded) read under that same layout
+    assert rs.extra["shard"]["resharded"] is False
+
+    # respawning an already-committed step is refused
+    with pytest.raises(RuntimeError, match="already committed"):
+        sup.respawn_resharded(root, spill, new_n)
