@@ -916,6 +916,122 @@ def bench_resharding(args, qcfg: QuantConfig) -> dict:
     }
 
 
+def bench_serving(args, qcfg: QuantConfig) -> dict:
+    """Publisher/subscriber serving fleet (docs/serving.md): N replica
+    subscribers track one training job over the throttled read model.
+
+    Each replica pays the model ONCE (the initial full sync); every
+    subsequent refresh must cost ≈ the step's touched-row payload — the
+    commit-time delta index's own estimate plus a metadata allowance —
+    regardless of model size. That is the ``serving_bytes_o_touched``
+    acceptance flag. Freshness: every replica is at lag 0 after its poll.
+    Correctness: after the run every replica's served tables and dense
+    params are byte-identical to a cold ``restore(head)``
+    (``serving_matches_restore``)."""
+    from repro.serve import CheckpointSubscriber
+    from repro.serve.delta_index import catchup_cost
+
+    base = make_workload(args.tables, args.rows, args.dim, seed=11,
+                         dense_dim=32)
+    store = InMemoryStore()
+    mgr = CheckNRunManager(store, CheckpointConfig(
+        policy="consecutive", quant=qcfg, async_write=False,
+        chunk_rows=args.chunk_rows,
+        encode_workers=args.encode_workers,
+        write_workers=args.write_workers))
+    mgr.save(base).result()
+    model_bytes = sum(m.nbytes_total for m in mf.recovery_chain(store, 1))
+
+    def throttled():
+        return ThrottledStore(
+            store, write_bytes_per_sec=1e12,
+            read_bytes_per_sec=args.read_mbps * 1e6,
+            read_latency_s=args.read_latency_ms / 1e3)
+
+    views = [throttled() for _ in range(args.serve_replicas)]
+    subs = [CheckpointSubscriber(v, fetch_workers=args.restore_workers,
+                                 decode_workers=args.decode_workers)
+            for v in views]
+    full_sync = []
+    for v, sub in zip(views, subs):
+        b0 = v.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+        applied = sub.poll_once()
+        full_sync.append({
+            "applied": applied,
+            "wall_s": round(time.monotonic() - t0, 4),
+            "bytes": v.counters.snapshot()["bytes_read"] - b0})
+
+    meta_slack = 262_144  # manifest JSON + rounding per refresh
+    snap = base
+    sweep = []
+    o_touched = True
+    for i in range(args.serve_steps):
+        step = 2 + i
+        snap = _touch_snap(snap, step, args.serve_touch, seed=40 + i)
+        mgr.save(snap).result()
+        touched = catchup_cost([mf.load(store, step)])
+        replicas = []
+        for v, sub in zip(views, subs):
+            b0 = v.counters.snapshot()["bytes_read"]
+            t0 = time.monotonic()
+            applied = sub.poll_once()
+            nbytes = v.counters.snapshot()["bytes_read"] - b0
+            ok = bool(applied) and nbytes <= touched["nbytes"] + meta_slack
+            o_touched = o_touched and ok
+            replicas.append({
+                "wall_s": round(time.monotonic() - t0, 4),
+                "bytes": nbytes,
+                "lag_steps": sub.health.lag_steps,
+                "bytes_o_touched": ok})
+        sweep.append({
+            "step": step,
+            "touched_payload_bytes": touched["nbytes"],
+            "touched_rows": touched["rows_touched"],
+            "replicas": replicas,
+            # the headline: refresh cost as a fraction of re-shipping
+            # the model to every replica each step
+            "bytes_vs_model": round(
+                max(r["bytes"] for r in replicas) / max(model_bytes, 1),
+                4)})
+    head = 1 + args.serve_steps
+    mgr.close()
+
+    # differential: every replica byte-identical to a cold restore(head)
+    rmgr = CheckNRunManager(store, CheckpointConfig(
+        policy="consecutive", quant=qcfg, async_write=False,
+        restore_workers=args.restore_workers,
+        decode_workers=args.decode_workers))
+    ref = rmgr.restore(head)
+    rmgr.close()
+    matches = True
+    for sub in subs:
+        with sub.server.pinned() as view:
+            if view.step != head:
+                matches = False
+                continue
+            for name, want in ref.tables.items():
+                if not np.array_equal(
+                        view.lookup(name, np.arange(want.shape[0])), want):
+                    matches = False
+            for name, want in ref.dense.items():
+                if not np.array_equal(view.dense(name), want):
+                    matches = False
+    return {
+        "config": {"tables": args.tables, "rows": args.rows,
+                   "dim": args.dim, "bits": qcfg.bits,
+                   "method": qcfg.method, "replicas": args.serve_replicas,
+                   "steps": args.serve_steps, "touch": args.serve_touch,
+                   "read_mbps": args.read_mbps,
+                   "read_latency_ms": args.read_latency_ms},
+        "model_bytes": model_bytes,
+        "full_sync": full_sync,
+        "sweep": sweep,
+        "bytes_o_touched": o_touched,
+        "matches_restore": matches,
+    }
+
+
 def bench_packing(n_codes: int, extra_bits: int = 4) -> dict:
     rng = np.random.default_rng(0)
     out = {}
@@ -1007,6 +1123,13 @@ def main(argv=None):
     ap.add_argument("--multiprocess-only", action="store_true",
                     help="run only the real-process sweep (CI gate: exits "
                          "nonzero unless restores are byte-identical)")
+    ap.add_argument("--serve-replicas", type=int, default=3,
+                    help="subscriber replicas for the serving section "
+                         "(0 skips it)")
+    ap.add_argument("--serve-steps", type=int, default=4,
+                    help="incremental steps each replica tracks")
+    ap.add_argument("--serve-touch", type=float, default=0.05,
+                    help="fraction of rows touched per serving step")
     ap.add_argument("--prior-adaptive-wall", type=float, default=1.157,
                     help="previously recorded pipelined adaptive wall_s "
                          "(the issue's 3x baseline)")
@@ -1127,6 +1250,14 @@ def main(argv=None):
         reshard = bench_resharding(args, qcfg)
         print(json.dumps(reshard, indent=1))
 
+    serving = None
+    if args.serve_replicas:
+        print(f"== serving fleet ({args.serve_replicas} replicas x "
+              f"{args.serve_steps} steps, touch {args.serve_touch}, "
+              f"{args.read_mbps} MB/s reads) ==")
+        serving = bench_serving(args, qcfg)
+        print(json.dumps(serving, indent=1))
+
     print(f"== packing microbench ({args.pack_codes} codes) ==")
     pack = bench_packing(args.pack_codes, extra_bits=args.bits)
     print(json.dumps(pack, indent=1))
@@ -1142,6 +1273,7 @@ def main(argv=None):
         "multiprocess": multiproc,
         "recovery": recov,
         "resharding": reshard,
+        "serving": serving,
         "packing": pack,
         "acceptance": {
             "e2e_speedup_ge_3x": e2e["speedup_e2e"] >= 3.0,
@@ -1185,6 +1317,13 @@ def main(argv=None):
                 if reshard else None),
             "resharding_matches_full_slice": (
                 reshard["matches_full_slice"] if reshard else None),
+            # a serving replica's per-step refresh fetches ≈ the touched
+            # rows' payload (the delta index's own estimate), never the
+            # model; every replica ends byte-identical to restore(head)
+            "serving_bytes_o_touched": (
+                serving["bytes_o_touched"] if serving else None),
+            "serving_matches_restore": (
+                serving["matches_restore"] if serving else None),
         },
     }
     with open(args.out, "w") as f:

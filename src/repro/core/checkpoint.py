@@ -62,6 +62,11 @@ from .quantize import (
 from .snapshot import Snapshot
 from .storage import CheckpointCancelled, LocalFSStore, ObjectStore
 
+# serve.delta_index is import-cycle-free by design (numpy-only at module
+# scope; repro.serve.__init__ is lazy) — the writers stamp the serving
+# layer's read-optimized delta index at commit time (docs/serving.md)
+from ..serve.delta_index import build_delta, compress_spans
+
 META_DTYPE = np.float16  # fp16 scale/zero metadata (halves per-row overhead)
 
 
@@ -574,7 +579,8 @@ class CheckNRunManager:
             nbytes_total=total_bytes,
             wall_time_s=time.monotonic() - t_start,
             created_unix=time.time(),
-            layout=mf.make_layout(1))
+            layout=mf.make_layout(1),
+            delta=build_delta(tables, dense))
         mf.commit(self.store, man)
 
         self._post_commit(step, decision, total_bytes)
@@ -938,10 +944,15 @@ class CheckNRunManager:
                                                        full, clock)
         row_range = ([int(idx[0]), int(idx[-1]) + 1]
                      if full and len(idx) else None)
+        # incremental chunks record compressed global-row spans — the delta
+        # index's raw material and a tighter planner bound than the writer
+        # shard (full chunks are exactly range-encoded already)
+        row_spans = (compress_spans(idx)
+                     if not full and len(idx) else None)
         rec = mf.ChunkRecord(
             key=key, n_rows=int(len(idx)), nbytes=len(payload),
             crc32=ObjectStore.checksum(payload), sections=sections,
-            row_range=row_range, hash32=hash32)
+            row_range=row_range, hash32=hash32, row_spans=row_spans)
         return payload, rec
 
     def _encode_dense_job(self, key: str, arr: np.ndarray):
@@ -1404,88 +1415,109 @@ class CheckNRunManager:
     def _decode_chunk(self, step: Optional[int], table: Optional[str],
                       rec: mf.TableRecord, ch: mf.ChunkRecord,
                       data: bytes):
-        """Verify + unpack + dequantize one chunk (decode workers, CPU).
-        Returns (global row idx, row values, {aux: (vals, width, dtype)}).
-        Integrity failures raise :class:`ChunkCorruptionError` carrying
-        step/table/key — ``restore(on_corruption="fallback")`` replans on
-        it, and operators see WHICH step to ``ckpt quarantine`` instead of
-        a bare checksum message."""
-        dim = rec.dim
-        verify_chunk_bytes(ch, data, step, table)
-        if "indices" in ch.sections:
-            o, n = ch.sections["indices"]
-            idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
-        else:
-            lo, hi = ch.row_range
-            idx = np.arange(lo, hi, dtype=np.int64)
-        if "values" in ch.sections:
-            o, n = ch.sections["values"]
-            vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
-        else:
-            o, n = ch.sections["scale"]
-            if rec.meta_dtype is not None:
-                meta_dt = np.dtype(rec.meta_dtype)
-            else:  # pre-meta_dtype manifests: sniff fp16 by section length
-                meta_dt = np.float16 if n == 2 * ch.n_rows else np.float32
-            scale = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
-            o, n = ch.sections["zero"]
-            zero = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
-            o, n = ch.sections["codes"]
-            codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
-            q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
-            vals = np.asarray(dequantize(q))
-        aux: Dict[str, Tuple[np.ndarray, int, np.dtype]] = {}
-        for a_name, a_dt in rec.row_state.items():
-            sec8 = ch.sections.get(f"aux8:{a_name}")
-            sec = ch.sections.get(f"aux:{a_name}")
-            if sec8 is not None:
-                o, n = sec8
-                lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
-                codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
-                # float64 scale arithmetic on Python floats, matching the
-                # ENCODER exactly: float32 `(hi - lo) / 255.0` underflows
-                # for near-zero ranges, distorting the dequant scale (and
-                # a zero scale would collapse every row to `lo`)
-                lo, hi = float(lo), float(hi)
-                scale8 = (hi - lo) / 255.0 or 1.0
-                a_vals = (codes.astype(np.float64) * scale8 + lo).astype(
-                    np.float32)
-            elif sec is None:
-                continue
-            else:
-                o, n = sec
-                a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
-            width = a_vals.size // max(ch.n_rows, 1)
-            aux[a_name] = (a_vals, width, np.dtype(a_dt))
-        return idx, vals, aux
+        return decode_chunk(step, table, rec, ch, data)
 
     def _apply_decoded(self, out: np.ndarray,
                        aux_out: Dict[str, np.ndarray], rec: mf.TableRecord,
                        ch: mf.ChunkRecord, row_offset: int, decoded) -> None:
-        """Scatter one decoded chunk (the single ordered applier thread —
-        chain-replay overwrite order is preserved by submission order, so
-        no locking is needed here). ``row_offset`` shifts the chunk's
-        global row indices into a shard-local ``out`` (restore_part)."""
-        idx, vals, aux = decoded
-        if row_offset:
-            idx = idx - row_offset
-        out[idx] = vals
-        for a_name, (a_vals, width, a_dt) in aux.items():
-            if a_name not in aux_out:
-                rows = out.shape[0]  # == rec.rows unless shard-local
-                shape = (rows,) if width == 1 else (rows, width)
-                aux_out[a_name] = np.zeros(shape, dtype=a_dt)
-            if width == 1:
-                aux_out[a_name][idx] = a_vals
-            else:
-                aux_out[a_name][idx] = a_vals.reshape(-1, width)
+        apply_decoded(out, aux_out, rec, ch, row_offset, decoded)
 
     def _decode_dense(self, step: Optional[int], name: Optional[str],
                       rec: mf.DenseRecord, data: bytes) -> np.ndarray:
-        got = ObjectStore.checksum(data)
-        if got != rec.crc32:
-            raise ChunkCorruptionError(
-                step, name, rec.key, "crc32-mismatch",
-                f"got {got:#010x}, manifest records {rec.crc32:#010x}")
-        return np.frombuffer(
-            data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()
+        return decode_dense(step, name, rec, data)
+
+
+# Module-level decode/apply stages: shared by the manager's restore path
+# and the serving subscriber (repro.serve.subscriber), which replays the
+# same chunks without a CheckpointManager. None of them touch manager
+# state — a chunk decodes the same way no matter who asked.
+def decode_chunk(step: Optional[int], table: Optional[str],
+                 rec: mf.TableRecord, ch: mf.ChunkRecord,
+                 data: bytes):
+    """Verify + unpack + dequantize one chunk (decode workers, CPU).
+    Returns (global row idx, row values, {aux: (vals, width, dtype)}).
+    Integrity failures raise :class:`ChunkCorruptionError` carrying
+    step/table/key — ``restore(on_corruption="fallback")`` replans on
+    it, and operators see WHICH step to ``ckpt quarantine`` instead of
+    a bare checksum message."""
+    dim = rec.dim
+    verify_chunk_bytes(ch, data, step, table)
+    if "indices" in ch.sections:
+        o, n = ch.sections["indices"]
+        idx = np.frombuffer(data[o:o + n], dtype=np.uint32).astype(np.int64)
+    else:
+        lo, hi = ch.row_range
+        idx = np.arange(lo, hi, dtype=np.int64)
+    if "values" in ch.sections:
+        o, n = ch.sections["values"]
+        vals = np.frombuffer(data[o:o + n], dtype=np.float32).reshape(-1, dim)
+    else:
+        o, n = ch.sections["scale"]
+        if rec.meta_dtype is not None:
+            meta_dt = np.dtype(rec.meta_dtype)
+        else:  # pre-meta_dtype manifests: sniff fp16 by section length
+            meta_dt = np.float16 if n == 2 * ch.n_rows else np.float32
+        scale = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+        o, n = ch.sections["zero"]
+        zero = np.frombuffer(data[o:o + n], dtype=meta_dt).astype(np.float32)
+        o, n = ch.sections["codes"]
+        codes = packing.unpack_bits(data[o:o + n], rec.bits, ch.n_rows * dim)
+        q = Quantized(codes.reshape(-1, dim), scale, zero, bits=rec.bits)
+        vals = np.asarray(dequantize(q))
+    aux: Dict[str, Tuple[np.ndarray, int, np.dtype]] = {}
+    for a_name, a_dt in rec.row_state.items():
+        sec8 = ch.sections.get(f"aux8:{a_name}")
+        sec = ch.sections.get(f"aux:{a_name}")
+        if sec8 is not None:
+            o, n = sec8
+            lo, hi = np.frombuffer(data[o:o + 8], dtype=np.float32)
+            codes = np.frombuffer(data[o + 8:o + n], dtype=np.uint8)
+            # float64 scale arithmetic on Python floats, matching the
+            # ENCODER exactly: float32 `(hi - lo) / 255.0` underflows
+            # for near-zero ranges, distorting the dequant scale (and
+            # a zero scale would collapse every row to `lo`)
+            lo, hi = float(lo), float(hi)
+            scale8 = (hi - lo) / 255.0 or 1.0
+            a_vals = (codes.astype(np.float64) * scale8 + lo).astype(
+                np.float32)
+        elif sec is None:
+            continue
+        else:
+            o, n = sec
+            a_vals = np.frombuffer(data[o:o + n], dtype=np.dtype(a_dt))
+        width = a_vals.size // max(ch.n_rows, 1)
+        aux[a_name] = (a_vals, width, np.dtype(a_dt))
+    return idx, vals, aux
+
+
+def apply_decoded(out: np.ndarray,
+                  aux_out: Dict[str, np.ndarray], rec: mf.TableRecord,
+                  ch: mf.ChunkRecord, row_offset: int, decoded) -> None:
+    """Scatter one decoded chunk (the single ordered applier thread —
+    chain-replay overwrite order is preserved by submission order, so
+    no locking is needed here). ``row_offset`` shifts the chunk's
+    global row indices into a shard-local ``out`` (restore_part)."""
+    idx, vals, aux = decoded
+    if row_offset:
+        idx = idx - row_offset
+    out[idx] = vals
+    for a_name, (a_vals, width, a_dt) in aux.items():
+        if a_name not in aux_out:
+            rows = out.shape[0]  # == rec.rows unless shard-local
+            shape = (rows,) if width == 1 else (rows, width)
+            aux_out[a_name] = np.zeros(shape, dtype=a_dt)
+        if width == 1:
+            aux_out[a_name][idx] = a_vals
+        else:
+            aux_out[a_name][idx] = a_vals.reshape(-1, width)
+
+
+def decode_dense(step: Optional[int], name: Optional[str],
+                 rec: mf.DenseRecord, data: bytes) -> np.ndarray:
+    got = ObjectStore.checksum(data)
+    if got != rec.crc32:
+        raise ChunkCorruptionError(
+            step, name, rec.key, "crc32-mismatch",
+            f"got {got:#010x}, manifest records {rec.crc32:#010x}")
+    return np.frombuffer(
+        data, dtype=np.dtype(rec.dtype)).reshape(rec.shape).copy()

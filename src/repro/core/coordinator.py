@@ -43,6 +43,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from . import manifest as mf
 from .storage import ObjectStore
+# cycle-free by design: serve.delta_index is numpy-only at module scope
+from ..serve.delta_index import build_delta
 
 
 class ShardCommitError(RuntimeError):
@@ -179,7 +181,10 @@ def _assemble_manifest(step: int, num_hosts: int, ctx: CommitContext,
         tables=merged["tables"], dense=merged["dense"], extra=ctx.extra,
         nbytes_total=merged["nbytes_total"], wall_time_s=0.0,
         created_unix=max(p.created_unix for p in parts), shards=shards,
-        layout=mf.make_layout(num_hosts))
+        layout=mf.make_layout(num_hosts),
+        # pure function of the merged records — racing committers stamp
+        # byte-identical indexes, keeping commit_once's winner arbitrary
+        delta=build_delta(merged["tables"], merged["dense"]))
 
 
 def build_manifest(store: ObjectStore, step: int, num_hosts: int,

@@ -19,6 +19,7 @@ present, so the global manifest key stays the one atomic commit point.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import time
 from typing import Any, Dict, Iterable, List, Optional
@@ -105,6 +106,13 @@ class ChunkRecord:
     # host-side crc32's coverage. Old manifests omit it; verifiers treat
     # None as "no hash recorded", never as a failure.
     hash32: Optional[int] = None
+    # Incremental chunks only: compressed ``[[lo, hi), ...]`` spans of the
+    # chunk's GLOBAL row indices (``repro.serve.delta_index.compress_spans``)
+    # — a SUPERSET of the rows actually present, at most MAX_CHUNK_SPANS
+    # long. Feeds the manifest's delta index and tightens the range
+    # planner's per-chunk bounds. Old manifests omit it; readers fall back
+    # to the conservative writer-shard / whole-table bound.
+    row_spans: Optional[List[List[int]]] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -217,6 +225,13 @@ class Manifest:
     # Explicit versioned shard-layout record (:func:`make_layout`). Old
     # manifests omit it; readers normalize through :func:`layout_of`.
     layout: Optional[dict] = None
+    # Read-optimized delta index stamped at commit time
+    # (``repro.serve.delta_index.build_delta``): per-table touched-row
+    # spans + payload bytes, so a subscriber costs a catch-up without
+    # fetching chunk headers. Old manifests omit it; readers normalize
+    # through ``repro.serve.delta_index.delta_of`` (version-0 derivation,
+    # same pattern as ``layout``).
+    delta: Optional[dict] = None
 
     def to_json(self) -> str:
         d = dict(
@@ -234,6 +249,7 @@ class Manifest:
             created_unix=self.created_unix,
             shards=self.shards,
             layout=self.layout,
+            delta=self.delta,
         )
         return json.dumps(d, indent=1, sort_keys=True)
 
@@ -256,6 +272,7 @@ class Manifest:
             created_unix=d.get("created_unix", 0.0),
             shards=d.get("shards"),
             layout=d.get("layout"),
+            delta=d.get("delta"),
         )
 
 
@@ -338,14 +355,23 @@ def latest_step(store: ObjectStore) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def recovery_chain(store: ObjectStore, step: int) -> List[Manifest]:
+def recovery_chain(store: ObjectStore, step: int,
+                   load_fn=None) -> List[Manifest]:
     """Manifests to replay (oldest→newest) to reconstruct state at ``step``.
 
     * full checkpoint: [m]
     * one-shot / intermittent increment (cumulative): [base, m]
     * consecutive increment: [base, inc_1, ..., m] following prev_step links.
+
+    ``load_fn(step) -> Manifest`` overrides the per-step manifest load —
+    committed manifests are immutable, so a polling subscriber walks the
+    same chain every few seconds and a validated cache
+    (``repro.serve.subscriber.ManifestCache``) makes the steady-state walk
+    free of store reads. Default: uncached :func:`load`.
     """
-    m = load(store, step)
+    if load_fn is None:
+        load_fn = functools.partial(load, store)
+    m = load_fn(step)
     if m.kind == "full":
         return [m]
     chain = [m]
@@ -373,7 +399,7 @@ def recovery_chain(store: ObjectStore, step: int) -> List[Manifest]:
             raise ValueError(
                 f"recovery chain for step {step} exceeds {_MAX_CHAIN_LEN} "
                 f"links without reaching a full checkpoint")
-        cursor = load(store, prev)
+        cursor = load_fn(prev)
         chain.append(cursor)
     chain.reverse()
     if chain[0].kind != "full":

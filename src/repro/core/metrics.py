@@ -140,6 +140,33 @@ _HELP = {
     "latest_step": "Newest committed step.",
     "latest_step_age_s": "Seconds since the newest committed step.",
     "latest_step_nbytes": "Payload bytes of the newest committed step.",
+    # serving subscriber (docs/serving.md) — freshness and bytes-per-
+    # refresh are the two alertable signals: a healthy replica's lag
+    # stays near 0 and its refresh bytes track touched rows, not model
+    # size; a replica in "held" is serving intentionally stale data
+    "serve_state": "Subscriber state (one-hot by state label).",
+    "serve_applied_step": "Step the replica currently serves.",
+    "serve_head_step": "Newest committed step seen by the subscriber.",
+    "serve_lag_steps":
+        "Committed steps the served version is behind the head.",
+    "serve_polls_total": "Subscriber poll iterations.",
+    "serve_applied_steps_total": "Refreshes published to readers.",
+    "serve_refresh_bytes_total":
+        "Payload bytes fetched by catch-up refreshes.",
+    "serve_refresh_rows_total": "Embedding rows replayed by refreshes.",
+    "serve_refreshes_total":
+        "Published refreshes by kind (incremental delta apply vs full "
+        "resync).",
+    "serve_holds_total":
+        "Refreshes aborted on chunk corruption (replica held last good "
+        "version).",
+    "serve_errors_total": "Transient poll/refresh failures.",
+    "serve_manifest_cache_total":
+        "Validated manifest-cache lookups by outcome.",
+    "serve_last_refresh_wall_s": "Wall seconds of the last refresh.",
+    "serve_lookups_total": "Pinned lookup batches served.",
+    "serve_rows_read_total": "Embedding rows returned to lookups.",
+    "serve_consecutive_failures": "Consecutive failed polls.",
 }
 
 
@@ -216,6 +243,33 @@ def render_prometheus(values: dict, prefix: str = PROM_PREFIX) -> str:
               "verify_gets"):
         if k in remote:
             emit(f"remote_{k}_total", remote[k], mtype="counter")
+    serve = values.get("serve") or {}
+    if serve:
+        if serve.get("state") is not None:
+            for st in ("init", "idle", "live", "held", "retrying"):
+                emit("serve_state", int(serve["state"] == st),
+                     {"state": st})
+        for name in ("applied_step", "head_step", "lag_steps",
+                     "consecutive_failures", "last_refresh_wall_s"):
+            if name in serve:
+                emit(f"serve_{name}", serve[name])
+        emit("serve_refreshes_total",
+             serve.get("incremental_refreshes_total"),
+             {"kind": "incremental"}, "counter")
+        emit("serve_refreshes_total", serve.get("full_syncs_total"),
+             {"kind": "full"}, "counter")
+        emit("serve_manifest_cache_total",
+             serve.get("manifest_cache_hits_total"),
+             {"outcome": "hit"}, "counter")
+        emit("serve_manifest_cache_total",
+             serve.get("manifest_cache_misses_total"),
+             {"outcome": "miss"}, "counter")
+        for name in ("polls_total", "applied_steps_total",
+                     "refresh_bytes_total", "refresh_rows_total",
+                     "holds_total", "errors_total", "lookups_total",
+                     "rows_read_total"):
+            if name in serve:
+                emit(f"serve_{name}", serve[name], mtype="counter")
     return "\n".join(lines) + "\n" if lines else ""
 
 

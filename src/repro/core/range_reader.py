@@ -77,6 +77,12 @@ def chunk_row_bound(rec: mf.TableRecord, ch: mf.ChunkRecord,
     if ch.row_range is not None:
         lo, hi = ch.row_range
         return int(lo), int(hi), True
+    spans = getattr(ch, "row_spans", None)
+    if spans:
+        # compressed touched-row spans (serve/delta_index): the envelope
+        # [first lo, last hi) is tighter than any writer-shard bound, but
+        # gaps between spans mean it is still only a superset
+        return int(spans[0][0]), int(spans[-1][1]), False
     host = host_of_chunk_key(ch.key)
     if host is not None and src_num_hosts > 1:
         # incremental sharded chunk: the writer only selects rows inside
@@ -87,6 +93,19 @@ def chunk_row_bound(rec: mf.TableRecord, ch: mf.ChunkRecord,
             lo, hi = bounds[host]
             return lo, hi, False
     return 0, rec.rows, False
+
+
+def chunk_row_spans(rec: mf.TableRecord, ch: mf.ChunkRecord,
+                    src_num_hosts: int) -> List[List[int]]:
+    """Superset ``[lo, hi)`` spans of one chunk's global rows, preferring
+    the stamped compressed spans (incremental chunks written with the
+    delta index) over the single conservative bound. Used by the serving
+    layer to size resync copies; always covers every row in the chunk."""
+    spans = getattr(ch, "row_spans", None)
+    if spans:
+        return [[int(lo), int(hi)] for lo, hi in spans]
+    lo, hi, _ = chunk_row_bound(rec, ch, src_num_hosts)
+    return [[lo, hi]]
 
 
 def shard_targets(tables: Dict[str, mf.TableRecord], host: int,

@@ -20,6 +20,9 @@
   PYTHONPATH=src python -m repro.launch.ckpt recover --dir /ckpts/job-1 \
       --host 2 --fence   # replay ONE host's shard chain (O(shard) bytes);
                          # falls back to a full restore if unrecoverable
+  PYTHONPATH=src python -m repro.launch.ckpt subscribe --dir /ckpts/job-1 \
+      --follow --poll-s 2   # serving replica: follow the chain, apply
+                            # per-step deltas (O(touched rows)/refresh)
 
 ``--dir`` accepts a LocalFSStore root path OR a remote store URI
 (``http://host:port`` of a ``repro.core.object_server``), so every
@@ -87,7 +90,8 @@ def main(argv=None):
     ap.add_argument("cmd", choices=["list", "show", "verify", "scan",
                                     "validate", "quarantine", "resume",
                                     "emit-metrics", "gc", "gc-aborted",
-                                    "commit", "recover", "reshard"])
+                                    "commit", "recover", "reshard",
+                                    "subscribe", "serve"])
     ap.add_argument("--dir", required=True,
                     help="LocalFSStore root path or remote store URI "
                          "(http://host:port)")
@@ -123,8 +127,17 @@ def main(argv=None):
                     help="resume: structural completeness vs full content "
                          "verification of the whole recovery chain")
     ap.add_argument("--textfile", default=None,
-                    help="emit-metrics: write Prometheus textfile here "
-                         "(atomic) instead of stdout")
+                    help="emit-metrics / subscribe: write Prometheus "
+                         "textfile here (atomic) instead of stdout")
+    ap.add_argument("--follow", action="store_true",
+                    help="subscribe: keep polling after catching up "
+                         "(Ctrl-C to stop); default is one catch-up to "
+                         "the head step, then exit")
+    ap.add_argument("--poll-s", type=float, default=2.0,
+                    help="subscribe --follow: poll cadence in seconds")
+    ap.add_argument("--max-polls", type=int, default=None,
+                    help="subscribe --follow: stop after N polls "
+                         "(default: poll forever)")
     args = ap.parse_args(argv)
 
     from ..core import integrity, make_store, metrics
@@ -211,6 +224,56 @@ def main(argv=None):
             print(f"wrote {len(text)} bytes to {args.textfile}")
         else:
             sys.stdout.write(text)
+        return 0
+
+    if args.cmd in ("subscribe", "serve"):
+        # serving-replica drill (docs/serving.md): follow the manifest
+        # chain and keep an in-memory EmbeddingServer fresh by applying
+        # per-step deltas — bytes fetched scale with touched rows, not
+        # model size. `serve` == `subscribe --follow`. One-shot mode
+        # (no --follow) catches up to the head step and exits, printing
+        # what a cold replica would have paid.
+        from ..serve import CheckpointSubscriber
+
+        follow = args.follow or args.cmd == "serve"
+        sub = CheckpointSubscriber(store)
+        before = store.counters.snapshot()["bytes_read"]
+        t0 = time.monotonic()
+
+        def on_apply(step):
+            m = sub.metrics()
+            print(f"step {step}: {sub.last_refresh_wall_s:.3f}s, "
+                  f"{m['refresh_bytes_total'] :,} bytes total, "
+                  f"lag {m['lag_steps']} step(s), state {m['state']}")
+
+        try:
+            if follow:
+                sub.follow(poll_s=args.poll_s, max_polls=args.max_polls,
+                           on_apply=on_apply)
+            else:
+                if sub.poll_once():
+                    on_apply(sub.applied_step)
+        except KeyboardInterrupt:
+            pass
+        m = sub.metrics()
+        nbytes = store.counters.snapshot()["bytes_read"] - before
+        if m["applied_step"] is None:
+            print(f"no checkpoint applied (state {m['state']}"
+                  + (f": {sub.health.reason}" if sub.health.reason else "")
+                  + ")")
+            return 1
+        print(f"serving step {m['applied_step']} (head {m['head_step']}, "
+              f"lag {m['lag_steps']}): {m['applied_steps_total']} "
+              f"refresh(es) — {m['incremental_refreshes_total']} "
+              f"incremental, {m['full_syncs_total']} full — "
+              f"{nbytes:,} bytes fetched in {time.monotonic() - t0:.2f}s")
+        if m["holds_total"]:
+            print(f"holds on corruption: {m['holds_total']} "
+                  f"(last reason: {sub.health.reason})")
+        if args.textfile:
+            text = metrics.render_prometheus({"serve": m})
+            metrics.write_textfile(text, args.textfile)
+            print(f"wrote {len(text)} bytes to {args.textfile}")
         return 0
 
     if args.cmd == "gc-aborted":

@@ -5,6 +5,11 @@ process serves batched requests from a model it periodically refreshes from
 the newest valid Check-N-Run checkpoint (full or increment chain) — the
 checkpoint cadence bounds serving staleness.
 
+Each refresh here is a full ``restore()`` because the whole TrainState is
+rebuilt. Replicas that serve *embeddings only* should use the delta
+subscriber instead (``repro.serve`` / ``ckpt subscribe --follow``,
+docs/serving.md): it pays touched-row bytes per refresh, not model bytes.
+
   PYTHONPATH=src python -m repro.launch.serve --arch dlrm-rm2 \
       --ckpt-dir /tmp/ckpts --requests 200 --batch 64 --refresh-every 50
 """

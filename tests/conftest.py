@@ -84,7 +84,7 @@ except ImportError:
     _st = types.ModuleType("hypothesis.strategies")
     _strategy = _Strategy()
     for _name in ("integers", "floats", "sampled_from", "booleans", "lists",
-                  "tuples", "just", "one_of", "text", "composite"):
+                  "tuples", "just", "one_of", "none", "text", "composite"):
         setattr(_st, _name, _strategy)
 
     _hyp = types.ModuleType("hypothesis")

@@ -1,0 +1,528 @@
+"""Serving-layer gate (docs/serving.md): a subscriber-fed replica must be
+byte-identical to a cold ``restore(step)`` at every committed step — the
+differential oracle — and must never expose a torn table under faults,
+corruption, or concurrent readers.
+
+* differential freshness: every step, including a forced full-checkpoint
+  boundary and a 2→3 reshard mid-stream;
+* gap collapse: missed steps catch up in ONE plan;
+* fault soak: seeded transport faults + a mid-apply kill; replica serves
+  old-or-new only and converges once faults clear (nightly widens the
+  seed grid via ``CNR_SERVE_SOAK_SEEDS``);
+* double-buffer concurrency: 8 reader threads hammer ``lookup()`` during
+  continuous applies — every batch is internally consistent with exactly
+  one published version;
+* manifest cache: steady-state polling is O(1) store reads (counter-
+  proven), each new step costs exactly one manifest get.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CheckNRunManager, CheckpointConfig, InMemoryStore
+from repro.core import manifest as mf
+from repro.core import metrics as metrics_mod
+from repro.core.remote_store import (
+    FaultSpec,
+    RemoteObjectStore,
+    RetryPolicy,
+    ServerTransport,
+    wrap_faulty,
+)
+from repro.core.snapshot import Snapshot
+from repro.core.storage import LocalFSStore
+from repro.serve import CheckpointSubscriber, EmbeddingServer, ManifestCache
+from test_store_concurrency import hammer
+
+FAST_RETRY = RetryPolicy(attempts=8, base_s=0.0005, cap_s=0.005)
+
+
+class Driver:
+    """Minimal training-job stand-in: owns the model arrays, mutates a
+    random row subset per step, saves through a real manager. Supports a
+    forced full boundary (policy-state reset, the only way ``consecutive``
+    re-baselines) and a mid-stream reshard (new manager, new layout)."""
+
+    def __init__(self, store, policy="consecutive", rows=160, dim=4,
+                 seed=0, num_hosts=1):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        self.tabs = {
+            "emb0": self.rng.normal(size=(rows, dim)).astype(np.float32),
+            "emb1": self.rng.normal(size=(rows + 37, dim))
+            .astype(np.float32),
+        }
+        self.policy = policy
+        self.step_no = 0
+        self.mgr = self._make_mgr(num_hosts)
+
+    def _make_mgr(self, num_hosts):
+        return CheckNRunManager(self.store, CheckpointConfig(
+            policy=self.policy, quant=None, async_write=False,
+            chunk_rows=64, keep_latest=20, num_hosts=num_hosts))
+
+    def step(self, frac=0.08):
+        self.step_no += 1
+        touched = {}
+        for name, arr in self.tabs.items():
+            n = max(1, int(arr.shape[0] * frac))
+            idx = self.rng.choice(arr.shape[0], size=n, replace=False)
+            arr[idx] += self.rng.normal(size=(n, arr.shape[1])) \
+                .astype(np.float32)
+            t = np.zeros(arr.shape[0], bool)
+            t[idx] = True
+            touched[name] = t
+        dense = {"mlp/w": self.rng.normal(size=(6, 6)).astype(np.float32)}
+        self.mgr.save(Snapshot(
+            step=self.step_no,
+            tables={k: v.copy() for k, v in self.tabs.items()},
+            row_state={n: {} for n in self.tabs},
+            touched=touched, dense=dense, extra={}), block=True)
+        return self.step_no
+
+    def force_full_next(self):
+        self.mgr.policy.state.baseline_step = None
+
+    def reshard(self, num_hosts):
+        self.mgr.close()
+        self.mgr = self._make_mgr(num_hosts)
+        self.mgr.resync_from(self.step_no)
+
+    def close(self):
+        self.mgr.close()
+
+
+def cold_restore(store, step):
+    """The differential oracle: a FRESH reader manager's restore(step).
+    (Never the writer's manager — restore() resyncs policy state and
+    would change the writer's subsequent full/incremental decisions.)"""
+    mgr = CheckNRunManager(store, CheckpointConfig(async_write=False))
+    try:
+        return mgr.restore(step)
+    finally:
+        mgr.close()
+
+
+def assert_serves_exactly(sub, store, step):
+    """Served tables and dense params byte-identical to restore(step)."""
+    ref = cold_restore(store, step)
+    with sub.server.pinned() as v:
+        assert v.step == step
+        for name, want in ref.tables.items():
+            got = v.lookup(name, np.arange(want.shape[0]))
+            np.testing.assert_array_equal(got, want, err_msg=name)
+        for name, want in ref.dense.items():
+            np.testing.assert_array_equal(v.dense(name), want,
+                                          err_msg=name)
+
+
+# ------------------------------------------------------- differential gate
+def test_differential_every_step_incl_full_boundary():
+    store = InMemoryStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        for i in range(8):
+            if i == 4:
+                drv.force_full_next()  # full-checkpoint boundary mid-run
+            step = drv.step()
+            assert sub.poll_once() is True
+            assert_serves_exactly(sub, store, step)
+    finally:
+        drv.close()
+    assert mf.load(store, 5).kind == "full"
+    assert mf.load(store, 6).kind == "incremental"
+    m = sub.metrics()
+    assert m["state"] == "live" and m["lag_steps"] == 0
+    # steps 2-4 and 6-8 ride the delta path; 1 and the boundary resync
+    assert m["incremental_refreshes_total"] == 6
+    assert m["full_syncs_total"] == 2
+
+
+def test_differential_across_reshard_2_to_3():
+    store = InMemoryStore()
+    drv = Driver(store, num_hosts=2)
+    sub = CheckpointSubscriber(store)
+    try:
+        for _ in range(3):
+            step = drv.step()
+            assert sub.poll_once()
+            assert_serves_exactly(sub, store, step)
+        drv.reshard(3)  # grow mid-stream; chain now spans two layouts
+        for _ in range(3):
+            step = drv.step()
+            assert sub.poll_once()
+            assert_serves_exactly(sub, store, step)
+    finally:
+        drv.close()
+    assert mf.load(store, 6).kind == "incremental", \
+        "reshard must not force a re-baseline"
+    m = sub.metrics()
+    # the layout change is invisible to the subscriber: chunk row indices
+    # are global, so post-reshard increments still apply as deltas
+    assert m["incremental_refreshes_total"] == 5
+    assert m["full_syncs_total"] == 1
+
+
+def test_gap_collapses_into_one_plan():
+    store = InMemoryStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        first = drv.step()
+        assert sub.poll_once()
+        for _ in range(4):  # subscriber misses these entirely
+            last = drv.step()
+    finally:
+        drv.close()
+    gets_before = store.counters.snapshot()["get_ops"]
+    assert sub.poll_once()
+    gets_used = store.counters.snapshot()["get_ops"] - gets_before
+    assert sub.applied_step == last
+    m = sub.metrics()
+    assert m["applied_steps_total"] == 2  # one initial sync + ONE catch-up
+    assert m["incremental_refreshes_total"] == 1
+    # the catch-up fetched only the gap's manifests + chunks, no re-fetch
+    # of the already-applied baseline
+    chain = mf.recovery_chain(store, last)
+    suffix = [man for man in chain if man.step > first]
+    expected_gets = len(suffix) + sum(
+        len(rec.chunks) for man in suffix for rec in man.tables.values()
+    ) + len(chain[-1].dense)
+    assert gets_used == expected_gets
+    assert_serves_exactly(sub, store, last)
+
+
+# ------------------------------------------------------------ fault soak
+SOAK_SEEDS = range(31, 31 + int(os.environ.get("CNR_SERVE_SOAK_SEEDS", "2")))
+
+
+@pytest.mark.parametrize("seed", SOAK_SEEDS)
+def test_subscriber_fault_soak_never_torn_then_converges(seed):
+    """Writer commits over a clean transport; the subscriber's transport
+    injects seeded faults. Whatever a poll's outcome, the replica serves
+    EXACTLY some committed step's state (old or new, never a mix); when
+    faults clear it converges to the head."""
+    backing = InMemoryStore()
+    writer_store = RemoteObjectStore(ServerTransport(backing),
+                                     retry=FAST_RETRY)
+    sub_store = RemoteObjectStore(ServerTransport(backing),
+                                  retry=RetryPolicy(attempts=3,
+                                                    base_s=0.0005,
+                                                    cap_s=0.003))
+    inj = wrap_faulty(sub_store, FaultSpec(
+        seed=seed, error_rate=0.25, slow_rate=0.05, slow_s=0.0005,
+        list_lag=1))
+    drv = Driver(writer_store, seed=seed)
+    sub = CheckpointSubscriber(sub_store)
+    try:
+        for _ in range(6):
+            drv.step()
+            sub.poll_once()  # may fail mid-apply — that's the point
+            if sub.applied_step is not None:
+                assert_serves_exactly(sub, writer_store, sub.applied_step)
+        assert inj.injected > 0, "soak row exercised no faults"
+        # clear faults: must converge to the head within a few polls
+        inj.spec = FaultSpec(seed=seed)
+        head = mf.latest_step(writer_store)
+        for _ in range(6):
+            if sub.applied_step == head:
+                break
+            sub.poll_once()
+        assert sub.applied_step == head
+        assert sub.health.state == "live"
+        assert_serves_exactly(sub, writer_store, head)
+    finally:
+        drv.close()
+
+
+class KillSwitchStore(InMemoryStore):
+    """Raises on the Nth get() once — a deterministic mid-apply death."""
+
+    def __init__(self):
+        super().__init__()
+        self.fail_at = None
+        self._gets = 0
+
+    def get(self, key):
+        self._gets += 1
+        if self.fail_at is not None and self._gets >= self.fail_at:
+            self.fail_at = None
+            raise ConnectionResetError("mid-apply kill")
+        return super().get(key)
+
+
+def test_mid_apply_kill_serves_old_version_then_recovers():
+    store = KillSwitchStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        first = drv.step(frac=0.5)
+        assert sub.poll_once()
+        drv.step(frac=0.5)
+        last = drv.step(frac=0.5)
+    finally:
+        drv.close()
+    # 2 manifest gets (steps 3 and 2; step 1 is cached) happen first, so
+    # +3 lands inside the chunk stream: a true mid-apply death
+    store.fail_at = store._gets + 3
+    assert sub.poll_once() is False
+    assert sub.health.state == "retrying"
+    assert sub.errors_total >= 1
+    # replica still serves the OLD step, untorn
+    assert sub.server.step == first
+    assert_serves_exactly(sub, store, first)
+    # next poll (fault cleared) converges; the aborted rows were repaired
+    # from the front buffer before the retry scattered over them
+    assert sub.poll_once() is True
+    assert sub.applied_step == last
+    assert_serves_exactly(sub, store, last)
+
+
+def test_corruption_holds_last_good_version_typed():
+    store = InMemoryStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        first = drv.step()
+        assert sub.poll_once()
+        second = drv.step()
+    finally:
+        drv.close()
+    man = mf.load(store, second)
+    key = next(iter(man.tables.values())).chunks[0].key
+    good = store.get(key)
+    flipped = good[:-2] + bytes([good[-2] ^ 0xFF, good[-1] ^ 0xFF])
+    store.put(key, flipped)
+    for _ in range(2):  # held state is sticky across polls
+        assert sub.poll_once() is False
+        assert sub.health.state == "held"
+        assert "corrupt" in (sub.health.reason or "").lower() \
+            or "mismatch" in (sub.health.reason or "").lower()
+    assert sub.holds_total == 2
+    assert sub.server.step == first
+    assert_serves_exactly(sub, store, first)
+    store.put(key, good)  # blob repaired (e.g. re-replicated)
+    assert sub.poll_once() is True
+    assert sub.health.state == "live"
+    assert_serves_exactly(sub, store, second)
+
+
+# ------------------------------------------------- double-buffer hammering
+def test_lookup_consistent_under_continuous_apply():
+    """8 reader threads vs one applier. Every row of every table is set to
+    the publishing version's value, so any torn batch (rows from two
+    versions, or tables from two versions under one pin) is detectable as
+    a mixed-value read."""
+    rows, dim, n_versions = 256, 4, 120
+    server = EmbeddingServer()
+    server.install({"emb0": np.zeros((rows, dim), np.float32),
+                    "emb1": np.zeros((rows, dim), np.float32)},
+                   {}, step=0)
+    dirty = {"emb0": [[0, rows]], "emb1": [[0, rows]]}
+    stop = threading.Event()
+    published = [0]
+
+    def applier():
+        try:
+            for v in range(1, n_versions + 1):
+                back = server.begin_apply()
+                back["emb0"][: rows // 2] = v  # torn window on purpose:
+                back["emb1"][:] = v            # emb1 full, emb0 half...
+                back["emb0"][rows // 2:] = v   # ...then completed
+                server.publish(v, dirty, {})
+                published[0] = v
+        finally:
+            stop.set()
+
+    errs = []
+
+    def reader(t):
+        rng = np.random.default_rng(t)
+        first = True
+        while first or not stop.is_set():
+            first = False
+            idx = rng.choice(rows, size=32, replace=False)
+            # plain lookup: one batch, one version
+            batch = server.lookup("emb0", idx)
+            vals = np.unique(batch)
+            assert len(vals) == 1, f"torn batch: versions {vals}"
+            # pinned view: cross-table consistency under one pin
+            with server.pinned() as view:
+                a = np.unique(view.lookup("emb0", idx))
+                b = np.unique(view.lookup("emb1", idx))
+                assert len(a) == 1 and len(b) == 1
+                assert a[0] == b[0] == view.step, \
+                    f"cross-table tear: {a[0]} vs {b[0]} at {view.step}"
+
+    app = threading.Thread(target=applier)
+    app.start()
+    try:
+        hammer(reader)
+    finally:
+        stop.set()
+        app.join()
+    assert published[0] == n_versions
+    # final state visible and exact
+    assert server.step == n_versions
+    np.testing.assert_array_equal(
+        server.lookup("emb0", np.arange(rows)),
+        np.full((rows, dim), n_versions, np.float32))
+
+
+def test_writer_waits_for_pinned_readers_to_drain():
+    server = EmbeddingServer()
+    server.install({"t": np.zeros((8, 2), np.float32)}, {}, step=0)
+    view = server.pinned()
+    back = server.begin_apply()
+    back["t"][:] = 1.0
+    server.publish(1, {"t": [[0, 8]]}, {})
+    # a reader still pins version 1's superseded buffers: begin_apply
+    # must block until it releases
+    got = []
+
+    def writer():
+        b = server.begin_apply()
+        got.append(float(b["t"][0, 0]))
+
+    th = threading.Thread(target=writer)
+    th.start()
+    time.sleep(0.1)
+    assert th.is_alive(), "begin_apply returned while a reader held a pin"
+    np.testing.assert_array_equal(view.lookup("t", np.arange(8)),
+                                  np.zeros((8, 2), np.float32))
+    view.release()
+    th.join(timeout=5)
+    assert not th.is_alive()
+    assert got == [1.0], "back buffer was not resynced to the front"
+
+
+# ------------------------------------------------------- manifest caching
+def test_steady_state_polling_is_one_list_zero_gets():
+    store = InMemoryStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        for _ in range(4):
+            drv.step()
+            sub.poll_once()
+        c0 = store.counters.snapshot()
+        misses0 = sub.cache.misses
+        for _ in range(10):
+            assert sub.poll_once() is False
+        c1 = store.counters.snapshot()
+        assert c1["get_ops"] == c0["get_ops"], \
+            "idle polls must not re-read manifests"
+        assert sub.cache.misses == misses0
+        # one new step: exactly ONE manifest get (the new head); the rest
+        # of the chain walk revalidates cached entries via size()
+        chain_len = len(mf.recovery_chain(store, 4))
+        hits0 = sub.cache.hits
+        drv.step()
+    finally:
+        drv.close()
+    g0 = store.counters.snapshot()["get_ops"]
+    assert sub.poll_once() is True
+    gets_used = store.counters.snapshot()["get_ops"] - g0
+    man = mf.load(store, 5)
+    payload_gets = 1 + sum(len(r.chunks) for r in man.tables.values()) \
+        + len(man.dense)
+    assert gets_used == payload_gets
+    assert sub.cache.misses == misses0 + 1  # only the new head
+    assert sub.cache.hits >= hits0 + chain_len - 1
+
+
+def test_manifest_cache_revalidates_on_size_change():
+    store = InMemoryStore()
+    drv = Driver(store)
+    try:
+        drv.step()
+    finally:
+        drv.close()
+    cache = ManifestCache(store)
+    m1 = cache.chain(1)[-1]
+    assert (cache.hits, cache.misses) == (0, 1)
+    assert cache.chain(1)[-1] is m1
+    assert (cache.hits, cache.misses) == (1, 1)
+    # same step, different bytes (quarantine + rewrite): size check busts
+    raw = store.get(mf.manifest_key(1))
+    store.put(mf.manifest_key(1), raw + b" ")
+    m2 = cache.chain(1)[-1]
+    assert m2 is not m1
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+# ---------------------------------------------------------------- metrics
+def test_prometheus_serve_section():
+    store = InMemoryStore()
+    drv = Driver(store)
+    sub = CheckpointSubscriber(store)
+    try:
+        drv.step()
+        drv.step()
+        sub.poll_once()
+    finally:
+        drv.close()
+    text = metrics_mod.render_prometheus({"serve": sub.metrics()})
+    assert 'cnr_serve_state{state="live"} 1' in text
+    assert "cnr_serve_lag_steps 0" in text
+    assert "cnr_serve_applied_step 2" in text
+    assert 'cnr_serve_refreshes_total{kind="full"} 1' in text
+    assert "cnr_serve_refresh_bytes_total" in text
+    assert 'cnr_serve_manifest_cache_total{outcome="miss"}' in text
+
+
+# ------------------------------------------------------------ CLI + kill
+def _write_chain(root, steps=3):
+    drv = Driver(LocalFSStore(root))
+    try:
+        for _ in range(steps):
+            drv.step()
+    finally:
+        drv.close()
+
+
+def test_ckpt_subscribe_cli_one_shot(tmp_path, capsys):
+    from repro.launch import ckpt as cli
+
+    _write_chain(str(tmp_path), steps=3)
+    assert cli.main(["subscribe", "--dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "serving step 3" in out
+
+
+@pytest.mark.slow
+def test_subscribe_process_sigkill_mid_apply_store_unharmed(tmp_path):
+    """SIGKILL a follower process mid-run: the store (which it only ever
+    reads) stays fully restorable and a fresh subscriber converges — the
+    in-memory replica is the only casualty."""
+    root = str(tmp_path)
+    _write_chain(root, steps=4)
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.ckpt", "subscribe",
+         "--dir", root, "--follow", "--poll-s", "0.05",
+         "--max-polls", "1000"],
+        env=env, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    time.sleep(1.0)  # mid-follow, likely mid- or post-first-apply
+    proc.send_signal(signal.SIGKILL)
+    proc.wait(timeout=30)
+    store = LocalFSStore(root)
+    assert mf.list_steps(store) == [1, 2, 3, 4]
+    ref = cold_restore(store, 4)  # chain fully intact
+    sub = CheckpointSubscriber(store)
+    assert sub.poll_once() is True
+    assert sub.applied_step == 4
+    with sub.server.pinned() as v:
+        for name, want in ref.tables.items():
+            np.testing.assert_array_equal(
+                v.lookup(name, np.arange(want.shape[0])), want)
